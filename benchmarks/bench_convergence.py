@@ -1,0 +1,102 @@
+"""Paper Table 1 / Figure 2 (and Table 2 / Figure 4 at --workers 16):
+test error of the global model vs number of effective passes, for
+{sequential SGD, SSGD, ASGD, DC-ASGD-c, DC-ASGD-a} at M workers.
+
+Scaled to this container: ResNet (the paper's model family, GroupNorm
+variant) at reduced width on the deterministic GaussianImages task; the
+claims validated are ORDERING claims (DC > ASGD/SSGD, DC ≈ seq SGD), not
+absolute CIFAR error rates — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs import get_config
+from repro.core import SimConfig, run_sim
+from repro.data import GaussianImages
+from repro.models import init as model_init
+from repro.models import loss_fn
+
+
+def _setup(width: int, seed: int, noise: float):
+    cfg = get_config("resnet20-cifar").with_(d_model=width)
+    ds = GaussianImages(seed=seed, noise=noise)
+    params = model_init(cfg, jax.random.PRNGKey(seed))
+
+    def gfn(p, batch):
+        def lf(pp):
+            return loss_fn(cfg, pp, batch)[0]
+        l, g = jax.value_and_grad(lf)(p)
+        return g, l
+
+    from repro.models import forward
+    test = {k: jnp.asarray(v) for k, v in ds.test_set().items()}
+
+    @jax.jit
+    def err_fn(p):
+        logits, _ = forward(cfg, p, test)
+        return 1.0 - jnp.mean(logits.argmax(-1) == test["labels"])
+
+    return cfg, ds, params, gfn, err_fn
+
+
+def run(workers=(1, 4, 8), steps=900, batch=32, width=8, lr=0.1,
+        lambda0=1.0, seed=0, noise=0.6, quick=False):
+    if quick:
+        steps, width = 120, 6
+    cfg, ds, params, gfn, err_fn = _setup(width, seed, noise)
+
+    def batches():
+        step = 0
+        while True:
+            b = ds.batch(step, batch)
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+            step += 1
+
+    algos = ["seq_sgd", "ssgd", "asgd", "dc_asgd_c", "dc_asgd_a"]
+    table = {}
+    for M in workers:
+        for algo in algos:
+            if M == 1 and algo != "seq_sgd":
+                continue
+            if M > 1 and algo == "seq_sgd":
+                continue
+            sc = SimConfig(
+                algo=algo, num_workers=M, lr=lr,
+                lambda0=(lambda0 if algo == "dc_asgd_c" else 2.0),
+                schedule="roundrobin", seed=seed,
+                lr_schedule=lambda t: lr * (0.1 if t > steps * 0.75 else 1.0))
+            res = run_sim(sc, params, gfn, batches(), steps=steps)
+            err = float(err_fn(res.final_state.w))
+            key = f"M{M}/{algo}"
+            table[key] = {
+                "test_error": err,
+                "final_train_loss": float(np.mean(res.losses[-10:])),
+                "mean_delay": float(np.mean(res.delays)),
+                "wallclock_model": res.wallclock[-1],
+                "losses": res.losses[:: max(steps // 50, 1)],
+            }
+            emit(f"convergence/{key}", 0.0,
+                 f"test_error={err:.4f};delay={table[key]['mean_delay']:.1f}")
+    save_json("bench_convergence" + ("_quick" if quick else ""),
+              {"steps": steps, "width": width, "batch": batch, "lr": lr,
+               "results": table})
+    return table
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, nargs="+", default=[1, 4, 8])
+    ap.add_argument("--steps", type=int, default=900)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(workers=tuple(args.workers), steps=args.steps, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU — correctness-path
+timing only) vs the XLA reference path, plus an analytic TPU-v5e roofline
+estimate per kernel (memory-bound byte counts / HBM bandwidth).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, time_fn
+from repro.kernels import ops, ref
+from repro.launch.mesh import HBM_BW
+
+
+def run(quick=False):
+    out = {}
+    n = 1 << 20 if not quick else 1 << 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    w = jax.random.normal(ks[0], (n,), jnp.float32)
+    bak = w * 0.99
+    g = jax.random.normal(ks[1], (n,), jnp.float32)
+    ms = jnp.abs(jax.random.normal(ks[2], (n,), jnp.float32))
+
+    fused = jax.jit(lambda *a: ref.dc_update(*a, eta=0.1, lam0=2.0))
+    us = time_fn(fused, w, bak, g, ms, iters=10)
+    # memory-bound roofline: 4 reads + 2 writes of n fp32
+    bytes_moved = 6 * n * 4
+    tpu_us = bytes_moved / HBM_BW * 1e6
+    out["dc_update"] = {"xla_us": us, "bytes": bytes_moved,
+                        "tpu_v5e_roofline_us": tpu_us}
+    emit("kernels/dc_update_xla", us, f"tpu_roofline_us={tpu_us:.1f}")
+
+    # unfused baseline: separate elementwise passes (what a naive server
+    # does) — counts 10n reads + 4n writes
+    def unfused(w, bak, g, ms):
+        ms2 = 0.95 * ms + 0.05 * g * g
+        lam = 2.0 / jnp.sqrt(ms2 + 1e-7)
+        gdc = g + lam * g * g * (w - bak)
+        return w - 0.1 * gdc, ms2
+    us_unfused = time_fn(jax.jit(unfused), w, bak, g, ms, iters=10)
+    out["dc_update_unfused_xla_us"] = us_unfused
+    emit("kernels/dc_update_unfused", us_unfused,
+         f"fused_speedup={us_unfused / us:.2f}x")
+
+    x = jax.random.normal(ks[3], (256, 1024), jnp.float32)
+    sc = jnp.ones((1024,))
+    us_rms = time_fn(jax.jit(lambda a, b: ref.rmsnorm(a, b)), x, sc, iters=10)
+    out["rmsnorm"] = {"xla_us": us_rms,
+                      "tpu_v5e_roofline_us": 2 * x.size * 4 / HBM_BW * 1e6}
+    emit("kernels/rmsnorm_xla", us_rms, "")
+
+    B, H, S, hd = (1, 4, 512, 64) if not quick else (1, 2, 128, 32)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, hd), jnp.float32)
+    us_fa = time_fn(jax.jit(
+        lambda a, b, c: ref.flash_attention(a, b, c, causal=True)),
+        q, k, v, iters=5)
+    flops = 4 * B * H * S * S * hd
+    out["attention"] = {"xla_us": us_fa, "flops": flops}
+    emit("kernels/attention_ref", us_fa,
+         f"gflops={flops / us_fa / 1e3:.1f}")
+
+    # pallas interpret-mode correctness-path timing (NOT a perf number on
+    # CPU; recorded so regressions in interpret overhead are visible)
+    ops.set_use_pallas(True)
+    try:
+        us_pl = time_fn(
+            lambda *a: ops.dc_update_leaf(
+                *a, jnp.array([0.1, 2.0, 0.95, 1e-7], jnp.float32)),
+            w[:65536], bak[:65536], g[:65536], ms[:65536], iters=3)
+    finally:
+        ops.set_use_pallas(False)
+    out["dc_update_pallas_interpret_us"] = us_pl
+    emit("kernels/dc_update_pallas_interpret", us_pl, "interpret-mode")
+
+    save_json("bench_kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

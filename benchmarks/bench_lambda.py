@@ -1,0 +1,59 @@
+"""Paper Figure 5 (appendix G): sensitivity to the compensation strength
+lambda_0.  DC-ASGD degrades to ASGD as lambda->0 and diverges/regresses
+when lambda is too large; a middle lambda is best.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs import get_config
+from repro.core import SimConfig, run_sim
+from repro.data import MarkovLM
+from repro.models import init as model_init
+from repro.models import loss_fn
+
+
+def run(lambdas=(0.0, 0.1, 0.5, 1.0, 2.0, 8.0), steps=300, workers=8,
+        lr=0.25, quick=False):
+    if quick:
+        lambdas, steps = (0.0, 0.5, 8.0), 80
+    cfg = get_config("tiny-lm").with_(num_layers=2, d_model=128,
+                                      num_heads=4, num_kv_heads=2,
+                                      head_dim=32, d_ff=256, vocab_size=512)
+    ds = MarkovLM(vocab=cfg.vocab_size, seed=0)
+    params = model_init(cfg, jax.random.PRNGKey(0))
+
+    def gfn(p, b):
+        def lf(pp):
+            return loss_fn(cfg, pp, b)[0]
+        l, g = jax.value_and_grad(lf)(p)
+        return g, l
+
+    def batches():
+        s = 0
+        while True:
+            b = ds.batch(s, 8, 64)
+            yield {k: jnp.asarray(v) for k, v in b.items()}
+            s += 1
+
+    out = {}
+    for lam in lambdas:
+        sc = SimConfig(algo="dc_asgd_c", num_workers=workers, lr=lr,
+                       lambda0=lam, schedule="roundrobin", seed=0)
+        res = run_sim(sc, params, gfn, batches(), steps=steps)
+        loss = float(np.mean(res.losses[-15:]))
+        out[f"lambda={lam}"] = {
+            "final_loss": loss,
+            "curve": res.losses[:: max(steps // 40, 1)],
+        }
+        emit(f"lambda_sweep/{lam}", 0.0, f"final_loss={loss:.4f}")
+    save_json("bench_lambda", {"workers": workers, "lr": lr, "steps": steps,
+                               "results": out})
+    return out
+
+
+if __name__ == "__main__":
+    run()

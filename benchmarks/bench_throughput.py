@@ -1,0 +1,56 @@
+"""Paper Figure 3: error vs WALLCLOCK.  Two components:
+
+1. measured per-push compute time for each algorithm (real jitted steps on
+   this CPU) — shows DC-ASGD's server overhead vs ASGD is negligible
+   (the paper's "no extra cost" claim);
+2. the simulator's wallclock model (stragglers + SSGD barrier) which turns
+   the per-push cost into time-to-accuracy curves.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json, time_fn
+from repro.configs import get_config
+from repro.core import init_server_state, server_push
+from repro.models import init as model_init
+from repro.models import loss_fn
+
+
+def run(quick=False):
+    cfg = get_config("tiny-lm")
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 128), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 128), 0,
+                                     cfg.vocab_size),
+    }
+
+    def gfn(p, b):
+        return jax.grad(lambda pp: loss_fn(cfg, pp, b)[0])(p)
+    g = jax.jit(gfn)(params, batch)
+    grad_us = time_fn(jax.jit(gfn), params, batch,
+                      iters=5 if quick else 20)
+
+    st = init_server_state(params, 4)
+    out = {"grad_us": grad_us}
+    for algo in ("asgd", "dc_asgd_c", "dc_asgd_a"):
+        push = jax.jit(lambda s, gr: server_push(
+            s, gr, jnp.int32(0), eta=0.1, lam0=0.04, algo=algo))
+        us = time_fn(push, st, g, iters=5 if quick else 20)
+        out[f"push_us/{algo}"] = us
+        emit(f"throughput/push/{algo}", us,
+             f"overhead_vs_asgd={us / max(out.get('push_us/asgd', us), 1e-9):.3f}x")
+    emit("throughput/grad_step", grad_us,
+         f"server_push_is_{out['push_us/dc_asgd_a'] / grad_us:.3%}_of_step")
+    save_json("bench_throughput", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

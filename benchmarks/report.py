@@ -1,0 +1,124 @@
+"""Render EXPERIMENTS.md tables from benchmark + dry-run artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ARTIFACT_DIR
+from benchmarks.roofline import analyse, load_records
+
+
+def _load(name):
+    p = os.path.join(ARTIFACT_DIR, name + ".json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def dryrun_table(mesh: str, technique: str = "baseline") -> str:
+    recs = load_records(mesh, technique)
+    out = ["| arch | shape | step | compile s | flops/dev | HLO bytes/dev | "
+           "coll bytes/dev | arg GB | temp GB |",
+           "|" + "---|" * 9]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        ex = r.get("extrapolated", {})
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | "
+            f"{r.get('compile_s', 0):.1f} | "
+            f"{ex.get('flops', r.get('flops', 0)):.2e} | "
+            f"{ex.get('bytes_accessed', 0):.2e} | "
+            f"{ex.get('collective_bytes', 0):.2e} | "
+            f"{r.get('argument_size_in_bytes', 0) / 2**30:.2f} | "
+            f"{r.get('temp_size_in_bytes', 0) / 2**30:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh: str = "16x16", technique: str = "baseline") -> str:
+    rows = [analyse(r) for r in load_records(mesh, technique)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | bound step s |",
+           "|" + "---|" * 8]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['bound_step_time_s']:.2e} |")
+    return "\n".join(out)
+
+
+def convergence_table() -> str:
+    d = _load("bench_convergence")
+    if not d:
+        return "(pending)"
+    out = ["| workers | algorithm | test error | final train loss | "
+           "mean delay | wallclock (model) |", "|" + "---|" * 6]
+    for key in sorted(d["results"]):
+        v = d["results"][key]
+        M, algo = key.split("/")
+        out.append(f"| {M[1:]} | {algo} | {v['test_error']:.4f} | "
+                   f"{v['final_train_loss']:.3f} | {v['mean_delay']:.1f} | "
+                   f"{v['wallclock_model']:.0f} |")
+    return "\n".join(out)
+
+
+def lambda_table() -> str:
+    d = _load("bench_lambda")
+    if not d:
+        return "(pending)"
+    out = ["| lambda_0 | final train loss |", "|---|---|"]
+    for k in sorted(d["results"], key=lambda s: float(s.split("=")[1])):
+        out.append(f"| {k.split('=')[1]} | "
+                   f"{d['results'][k]['final_loss']:.4f} |")
+    return "\n".join(out)
+
+
+def dcssgd_table() -> str:
+    d = _load("bench_dcssgd")
+    if not d:
+        return "(pending)"
+    out = ["| method | final train loss |", "|---|---|"]
+    for k in ("smallbatch_ref", "bigbatch_sgd", "dc_ssgd"):
+        if k in d:
+            out.append(f"| {k} | {d[k]['final']:.4f} |")
+    return "\n".join(out)
+
+
+def throughput_table() -> str:
+    d = _load("bench_throughput")
+    if not d:
+        return "(pending)"
+    out = ["| operation | wall us (CPU) |", "|---|---|"]
+    for k in sorted(d):
+        if isinstance(d[k], (int, float)):
+            out.append(f"| {k} | {d[k]:.0f} |")
+    return "\n".join(out)
+
+
+def main():
+    print("## Dry-run, single pod (16x16)\n")
+    print(dryrun_table("16x16"))
+    print("\n## Dry-run, multi-pod (2x16x16)\n")
+    print(dryrun_table("2x16x16"))
+    print("\n## Dry-run, DC-ASGD pod round (2x16x16)\n")
+    print(dryrun_table("2x16x16", "dc_round"))
+    print("\n## Roofline (16x16)\n")
+    print(roofline_table("16x16"))
+    print("\n## Convergence (Table 1 / Fig 2 analogue)\n")
+    print(convergence_table())
+    print("\n## Lambda sweep (Fig 5)\n")
+    print(lambda_table())
+    print("\n## DC-SSGD (Appendix H)\n")
+    print(dcssgd_table())
+    print("\n## Throughput (Fig 3 components)\n")
+    print(throughput_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""§Roofline: derive the three roofline terms for every (arch x shape x
+mesh) from the dry-run artifacts (deliverable g).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s            [s]
+  memory     = HLO_bytes_per_device / HBM_bw                 [s]
+  collective = collective_bytes_per_device / ICI link bw     [s]
+
+The dry-run HLO is the *partitioned per-device* module, so artifact numbers
+are per-device already (equivalent to the global/chips normalization).
+``extrapolated`` costs are used (they correct XLA's count-while-bodies-once
+behavior; see launch/dryrun.py).
+
+MODEL_FLOPS uses the standard 6·N·D (train) / 2·N·D (inference) with
+N = active parameters (MoE counts k/E of routed experts + shared), and the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/overhead waste.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import jax
+
+from benchmarks.common import ARTIFACT_DIR
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import abstract_params, adapt_config
+from repro.utils.tree import tree_map_with_path_names
+
+
+def active_param_count(cfg) -> tuple:
+    """(total_params, active_params) from the abstract tree."""
+    ap = abstract_params(cfg)
+    total = {"n": 0}
+    expert = {"n": 0}
+
+    def visit(name, x):
+        import numpy as np
+        n = int(np.prod(x.shape))
+        total["n"] += n
+        if "moe/w_" in name:
+            expert["n"] += n
+        return x
+    tree_map_with_path_names(visit, ap)
+    if cfg.num_experts:
+        frac = cfg.experts_per_token / max(cfg.num_experts, 1)
+        active = total["n"] - expert["n"] + int(expert["n"] * frac)
+    else:
+        active = total["n"]
+    return total["n"], active
+
+
+def model_flops(cfg, shape, num_devices: int, technique: str) -> float:
+    """Per-device useful model FLOPs for the step."""
+    total, active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0          # fwd 2 + bwd 4
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * active * tokens / num_devices
+
+
+def load_records(mesh: str, technique: str = "baseline"):
+    recs = []
+    suffix = f"_{technique}" if technique != "baseline" else ""
+    for path in sorted(glob.glob(os.path.join(
+            ARTIFACT_DIR, f"dryrun_*_{mesh}{suffix}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("technique", "baseline") == technique:
+            recs.append(r)
+    return recs
+
+
+def analyse(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    ex = rec.get("extrapolated", {})
+    flops = ex.get("flops", rec.get("flops", 0.0))
+    bytes_acc = ex.get("bytes_accessed", rec.get("bytes_accessed", 0.0))
+    coll = ex.get("collective_bytes",
+                  rec["collectives"]["total_bytes"])
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, rec["num_devices"], rec["technique"])
+    total = max(sum(terms.values()), 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "technique": rec["technique"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops": flops,
+        "useful_ratio": (mf / flops) if flops else 0.0,
+        "roofline_fraction": terms[dominant] and (
+            max(t_compute, mf / PEAK_FLOPS_BF16) / max(
+                t_compute + t_memory + t_coll, 1e-30)),
+        "bound_step_time_s": max(terms.values()),
+        "memory_per_device_gb": rec.get("argument_size_in_bytes", 0) / 2**30,
+        "temp_gb": rec.get("temp_size_in_bytes", 0) / 2**30,
+    }
+
+
+_ADVICE = {
+    "compute": "increase arithmetic efficiency (fuse, larger tiles) or add "
+               "chips; compute-bound is the good place to be",
+    "memory": "cut HBM traffic: better remat policy, bf16 stashes, fused "
+              "elementwise chains, flash-attention tiling",
+    "collective": "reshard to cut cross-device bytes: more FSDP-gather "
+                  "overlap, sequence-parallel residuals, fewer all-gathers "
+                  "per layer, larger per-device shards",
+}
+
+
+def table(mesh: str = "16x16", technique: str = "baseline",
+          markdown: bool = True) -> str:
+    rows = [analyse(r) for r in load_records(mesh, technique)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = []
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful flops ratio | bound step s |")
+    out.append(hdr)
+    out.append("|" + "---|" * 8)
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['bound_step_time_s']:.2e} |")
+    return "\n".join(out), rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--technique", default="baseline")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+    md, rows = table(args.mesh, args.technique)
+    print(md)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run            # fast subset
+  PYTHONPATH=src python -m benchmarks.run --full     # full tables
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_convergence, bench_dcssgd,
+                            bench_delay_tolerance, bench_kernels,
+                            bench_lambda, bench_throughput)
+
+    jobs = [
+        ("kernels", lambda: bench_kernels.run(quick=quick)),
+        ("throughput_fig3", lambda: bench_throughput.run(quick=quick)),
+        ("lambda_fig5", lambda: bench_lambda.run(quick=quick)),
+        ("dcssgd_appendixH", lambda: bench_dcssgd.run(quick=quick)),
+        ("delay_tolerance_thm51", lambda: bench_delay_tolerance.run(
+            quick=quick)),
+        ("convergence_table1_fig2", lambda: bench_convergence.run(
+            quick=quick)),
+    ]
+
+    # roofline table from dry-run artifacts, if present
+    def _roofline():
+        from benchmarks import roofline
+        try:
+            md, rows = roofline.table("16x16", "baseline")
+            for r in rows:
+                print(f"roofline/{r['arch']}/{r['shape']},0.0,"
+                      f"dominant={r['dominant']};bound_s="
+                      f"{r['bound_step_time_s']:.3e}")
+        except Exception:
+            print("roofline/skipped,0.0,no-dryrun-artifacts")
+    jobs.append(("roofline", _roofline))
+
+    failures = 0
+    for name, fn in jobs:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

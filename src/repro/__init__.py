@@ -1,0 +1,7 @@
+"""repro: DC-ASGD (Zheng et al., ICML 2017) — delay-compensated
+asynchronous SGD as a production-grade multi-pod JAX framework.
+
+Subpackages: core (the paper's technique), models (10-arch zoo), kernels
+(Pallas TPU), configs, data, optim, train, serve, dist, launch, checkpoint.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,74 @@
+"""Checkpointing: pytree <-> .npz + structure manifest (orbax-free).
+
+Leaves are saved flat by '/'-joined key path; restore rebuilds into the
+given target structure (or a plain nested dict when no target is given).
+Atomic: writes to a tmp file then renames.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+CKPT_FILE = "checkpoint.npz"
+MANIFEST_FILE = "manifest.json"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def visit(path, x):
+        flat[path] = np.asarray(x)
+        return x
+
+    from repro.utils.tree import tree_map_with_path_names
+    tree_map_with_path_names(visit, tree)
+    return flat
+
+
+def save_checkpoint(directory: str, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()}
+    dst = os.path.join(directory, CKPT_FILE)
+    tmp = dst + f".tmp-{os.getpid()}.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, dst)
+    with open(os.path.join(directory, MANIFEST_FILE), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return dst
+
+
+def load_checkpoint(directory: str, target: Optional[Any] = None) -> Any:
+    path = os.path.join(directory, CKPT_FILE)
+    data = np.load(path)
+    if target is not None:
+        from repro.utils.tree import tree_map_with_path_names
+        missing = []
+
+        def visit(name, x):
+            if name not in data:
+                missing.append(name)
+                return x
+            arr = data[name]
+            assert tuple(arr.shape) == tuple(x.shape), (name, arr.shape,
+                                                        x.shape)
+            return jax.numpy.asarray(arr, dtype=x.dtype)
+        restored = tree_map_with_path_names(visit, target)
+        if missing:
+            raise KeyError(f"checkpoint missing leaves: {missing[:5]}...")
+        return restored
+    # no target: rebuild nested dict from '/' paths
+    out: dict = {}
+    for k in data.files:
+        parts = k.split("/")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = jax.numpy.asarray(data[k])
+    return out

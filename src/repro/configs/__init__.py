@@ -1,0 +1,16 @@
+from repro.configs.base import (
+    ASSIGNED_ARCHS,
+    EXTRA_ARCHS,
+    INPUT_SHAPES,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    all_arch_names,
+    get_config,
+    register,
+)
+
+__all__ = [
+    "ASSIGNED_ARCHS", "EXTRA_ARCHS", "INPUT_SHAPES", "ModelConfig",
+    "RunConfig", "ShapeConfig", "all_arch_names", "get_config", "register",
+]

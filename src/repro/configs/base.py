@@ -1,0 +1,232 @@
+"""Config system: architecture + run configs, registry, input shapes.
+
+Every assigned architecture lives in ``repro/configs/<id>.py`` and registers a
+:class:`ModelConfig` carrying the exact dims from the assignment sheet.  The
+``reduced()`` method derives the CPU-smoke-test variant (2 layers, small width)
+from the same family so smoke tests exercise identical code paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio", "cnn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # one of FAMILIES
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None    # default: d_model // num_heads
+    # attention flavour
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0           # 0 = full attention
+    # norms / activations
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    load_balance_loss: float = 1e-2
+    moe_impl: str = "dense"           # "dense" | "ep_a2a"
+    expert_pad: int = 0               # pad expert stacks to this size so they
+                                      # shard evenly over the mesh (0 = none)
+    # SSM (mamba-style selective state space, also used by hybrid)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 1
+    ssm_chunk: int = 128
+    ssm_unroll_chunks: bool = False   # python-unroll the chunk loop (used by
+                                      # dry-run cost variants: exact HLO flops)
+    unroll_layers: bool = False       # python-unroll the layer stack (ditto)
+    # xLSTM
+    block_pattern: Tuple[str, ...] = ()   # per-layer 'm' (mLSTM) / 's' (sLSTM)
+    mlstm_impl: str = "chunked"       # "chunked" (parallel, prod) | "scan"
+    mlstm_chunk: int = 64
+    # encoder-decoder (whisper-style)
+    encoder_layers: int = 0
+    num_frontend_tokens: int = 0      # audio frames / vision patches (stub)
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "full"               # "none" | "full" | "dots"
+    # provenance
+    source: str = ""
+
+    def __post_init__(self):
+        assert self.family in FAMILIES, self.family
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, (
+            f"{self.name}: num_heads {self.num_heads} not divisible by "
+            f"kv heads {self.num_kv_heads}")
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def group_size(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def padded_experts(self) -> int:
+        return max(self.expert_pad, self.num_experts)
+
+    def reduced(self, *, layers: int = 2, max_d_model: int = 256,
+                max_experts: int = 4, vocab: int = 512) -> "ModelConfig":
+        """Reduced same-family variant for CPU smoke tests."""
+        d = min(self.d_model, max_d_model)
+        hd = 32
+        heads = max(d // hd, 2)
+        # keep the GQA ratio when possible
+        kv = max(heads // max(self.group_size, 1), 1)
+        changes = dict(
+            name=self.name + "-smoke",
+            num_layers=layers,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 2 * d) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, vocab),
+            dtype="float32",
+            param_dtype="float32",
+            remat="none",
+        )
+        if self.num_experts:
+            changes.update(
+                num_experts=min(self.num_experts, max_experts),
+                experts_per_token=min(self.experts_per_token, 2),
+                num_shared_experts=min(self.num_shared_experts, 1),
+                shared_d_ff=min(self.shared_d_ff, 2 * d) if self.shared_d_ff else 0,
+            )
+        if self.block_pattern:
+            changes["block_pattern"] = self.block_pattern[:layers]
+        if self.encoder_layers:
+            changes["encoder_layers"] = layers
+            changes["num_frontend_tokens"] = min(self.num_frontend_tokens, 16)
+        if self.ssm_state:
+            changes["ssm_state"] = min(self.ssm_state, 8)
+            changes["ssm_chunk"] = 16
+        if self.sliding_window:
+            changes["sliding_window"] = min(self.sliding_window, 16)
+        return dataclasses.replace(self, **changes)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+ASSIGNED_ARCHS = (
+    "granite-20b", "qwen3-1.7b", "smollm-360m", "whisper-large-v3",
+    "hymba-1.5b", "qwen2.5-32b", "xlstm-125m", "qwen2-moe-a2.7b",
+    "qwen3-moe-30b-a3b", "chameleon-34b",
+)
+
+# paper's own experimental model (ResNet on CIFAR) plus a tiny LM used by
+# examples; registered alongside the assigned pool.
+EXTRA_ARCHS = ("resnet20-cifar", "tiny-lm")
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ASSIGNED_ARCHS + EXTRA_ARCHS}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        mod = _MODULE_FOR.get(name)
+        if mod is None:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(set(_MODULE_FOR))}")
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[name]
+
+
+def all_arch_names() -> Tuple[str, ...]:
+    return ASSIGNED_ARCHS
+
+
+# ---------------------------------------------------------------------------
+# Run (training/serving) configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: str = "tiny-lm"
+    shape: str = "train_4k"
+    # optimizer / paper technique
+    optimizer: str = "dc_asgd_a"   # sgd|momentum|adam|asgd|ssgd|dc_asgd_c|dc_asgd_a|dc_ssgd
+    learning_rate: float = 0.1
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0
+    lambda0: float = 0.04          # DC-ASGD compensation strength
+    dc_m: float = 0.95             # MeanSquare decay for DC-ASGD-a (Eqn. 14)
+    dc_eps: float = 1e-7
+    num_workers: int = 4           # parallel workers M
+    delay_schedule: str = "roundrobin"   # roundrobin|random|heterogeneous
+    max_delay: int = 8
+    # loop
+    steps: int = 100
+    log_every: int = 10
+    seed: int = 0
+    microbatches: int = 1
+    # mesh
+    snapshot_dtype: str = "bfloat16"   # per-pod w_bak storage (see §Perf)
+    mesh_shape: Tuple[int, ...] = (1,)
+    mesh_axes: Tuple[str, ...] = ("data",)
+    fsdp: bool = True
+    use_pallas: bool = False       # pallas kernels (interpret on CPU)
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 0

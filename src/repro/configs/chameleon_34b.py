@@ -1,0 +1,22 @@
+"""chameleon-34b [vlm] — early-fusion, VQ image tokens [arXiv:2405.09818].
+
+Early fusion means image patches arrive as ordinary VQ token ids inside the
+65536-entry vocabulary; the VQ tokenizer itself is the allowed modality stub.
+Chameleon uses qk-norm for training stability.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    qk_norm=True,
+    num_frontend_tokens=1024,   # VQ tokens per image (stubbed tokenizer)
+    source="arXiv:2405.09818 (Chameleon)",
+))

@@ -1,0 +1,24 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads [arXiv:2411.13676].
+
+Each block runs attention heads and a selective-SSM (mamba) head in
+*parallel* on the same input, then fuses via per-path normalization + mean.
+Meta tokens from the paper are omitted (orthogonal to DC-ASGD; see DESIGN.md).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=1,
+    sliding_window=1024,      # hymba uses SWA in most layers
+    source="arXiv:2411.13676 (Hymba)",
+))

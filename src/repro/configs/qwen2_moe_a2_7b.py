@@ -1,0 +1,21 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B]."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,                 # per-expert FFN width
+    vocab_size=151936,
+    qkv_bias=True,
+    num_experts=60,
+    expert_pad=64,             # stacks padded to shard evenly over model=16
+    experts_per_token=4,
+    num_shared_experts=4,
+    shared_d_ff=5632,          # 4 * 1408 merged shared expert
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+))

@@ -1,0 +1,20 @@
+"""resnet20-cifar [cnn] — the paper's own CIFAR-10 experimental model
+(He et al. 2016, as used in DC-ASGD Table 1).  Scaled-width variant runs the
+faithful convergence reproduction on CPU with synthetic 32x32 images."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="resnet20-cifar",
+    family="cnn",
+    num_layers=20,            # 3 stages x 3 blocks x 2 convs + stem + head
+    d_model=16,               # stem width
+    num_heads=1,
+    num_kv_heads=1,
+    head_dim=1,
+    d_ff=0,
+    vocab_size=10,            # num classes
+    dtype="float32",
+    param_dtype="float32",
+    remat="none",
+    source="He et al. 2016; DC-ASGD Sec. 6.1",
+))

@@ -1,0 +1,18 @@
+"""tiny-lm — a ~10M-param dense LM used by examples and end-to-end drivers."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="tiny-lm",
+    family="dense",
+    num_layers=4,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=1024,
+    vocab_size=2048,
+    dtype="float32",
+    param_dtype="float32",
+    remat="none",
+    source="(this repo)",
+))

@@ -1,0 +1,23 @@
+"""whisper-large-v3 [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is the allowed modality stub:
+``input_specs`` provides 1500 precomputed frame embeddings of shape
+[B, 1500, 1280]; this config covers the transformer backbone only.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    num_layers=32,            # decoder layers
+    encoder_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,          # MHA (GQA kv=20)
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    num_frontend_tokens=1500,
+    rope_theta=0.0,           # whisper uses learned/sinusoidal abs positions
+    source="arXiv:2212.04356 (Whisper)",
+))

@@ -1,0 +1,24 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517].
+
+``d_ff=0`` per the assignment: xLSTM blocks carry their own up/down
+projections (mLSTM: pre-up-projection, sLSTM: post-FFN-style gating), no
+separate transformer FFN.  Block pattern interleaves sLSTM at ~1:7 ratio
+(xLSTM[7:1]-style); positions chosen to match the paper's early/late spread.
+"""
+from repro.configs.base import ModelConfig, register
+
+_PATTERN = tuple("s" if i in (3, 9) else "m" for i in range(12))
+
+CONFIG = register(ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=_PATTERN,
+    source="arXiv:2405.04517 (xLSTM)",
+))

@@ -1,0 +1,19 @@
+"""The paper's primary contribution: DC-ASGD — delay-compensated
+asynchronous SGD (server update, async event loop, threaded PS, and the
+appendix-H synchronous variant)."""
+from repro.core.delay_comp import (
+    ServerState,
+    delay_compensated_gradient,
+    init_server_state,
+    server_pull,
+    server_push,
+)
+from repro.core.async_sim import ALGOS, SimConfig, SimResult, run_sim
+from repro.core.dc_ssgd import dc_ssgd_apply
+from repro.core.threads import PSConfig, PSResult, run_threaded
+
+__all__ = [
+    "ALGOS", "PSConfig", "PSResult", "ServerState", "SimConfig", "SimResult",
+    "dc_ssgd_apply", "delay_compensated_gradient", "init_server_state",
+    "run_sim", "run_threaded", "server_pull", "server_push",
+]

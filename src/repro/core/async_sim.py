@@ -1,0 +1,198 @@
+"""Deterministic ASGD / DC-ASGD simulator (paper Fig. 1 event loop).
+
+Reproduces the parameter-server training process with M virtual workers and
+a configurable interleaving schedule, bit-reproducibly.  Under the
+round-robin schedule every gradient arrives with delay tau = M - 1 (between
+worker m's pull and its push, the other M-1 workers each push once) — the
+regime the paper analyses.  ``random`` shuffles push order per round;
+``heterogeneous`` gives workers different speeds so delays are skewed
+(stragglers produce large tau), which is where delay compensation matters
+most.
+
+The simulator also integrates a simple wallclock model (per-worker step
+times; SSGD pays the straggler barrier, ASGD/DC-ASGD do not) so Fig. 3-style
+time-to-accuracy curves can be produced on CPU without real asynchrony.
+``repro.core.threads`` provides the genuinely-asynchronous host-threaded
+runtime for validation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delay_comp import (ServerState, init_server_state,
+                                   server_pull, server_push)
+from repro.utils.tree import tree_add, tree_scale, tree_zeros_like
+
+ALGOS = ("seq_sgd", "ssgd", "asgd", "dc_asgd_c", "dc_asgd_a")
+
+
+@dataclasses.dataclass
+class SimConfig:
+    algo: str = "dc_asgd_a"
+    num_workers: int = 4
+    lr: float = 0.1
+    lambda0: float = 0.04
+    dc_m: float = 0.95
+    dc_eps: float = 1e-7
+    schedule: str = "roundrobin"      # roundrobin | random | heterogeneous
+    seed: int = 0
+    # wallclock model: mean step time 1.0, worker m slowed by speed[m]
+    straggler_factor: float = 2.0     # slowest worker is this x slower
+    sync_overhead: float = 0.05       # per-barrier cost for SSGD
+    lr_schedule: Optional[Callable[[int], float]] = None
+
+
+@dataclasses.dataclass
+class SimResult:
+    steps: list
+    effective_passes: list
+    wallclock: list
+    losses: list
+    delays: list
+
+    def summary(self):
+        return {
+            "final_loss": self.losses[-1] if self.losses else float("nan"),
+            "mean_delay": float(np.mean(self.delays)) if self.delays else 0.0,
+            "total_time": self.wallclock[-1] if self.wallclock else 0.0,
+        }
+
+
+def _worker_speeds(cfg: SimConfig) -> np.ndarray:
+    if cfg.num_workers == 1:
+        return np.ones(1)
+    return np.linspace(1.0, cfg.straggler_factor, cfg.num_workers)
+
+
+def _schedule_iter(cfg: SimConfig) -> Iterator[int]:
+    """Yields the worker id of the next push event."""
+    rng = np.random.RandomState(cfg.seed)
+    M = cfg.num_workers
+    if cfg.schedule == "roundrobin":
+        while True:
+            for m in range(M):
+                yield m
+    elif cfg.schedule == "random":
+        while True:
+            for m in rng.permutation(M):
+                yield int(m)
+    elif cfg.schedule == "heterogeneous":
+        # next event = worker with smallest next-completion time
+        speeds = _worker_speeds(cfg)
+        t_next = speeds * (1 + 0.1 * rng.rand(M))
+        while True:
+            m = int(np.argmin(t_next))
+            yield m
+            t_next[m] += speeds[m] * (1 + 0.1 * rng.rand(M)[m])
+    else:
+        raise ValueError(cfg.schedule)
+
+
+def run_sim(cfg: SimConfig, init_params, grad_fn, batch_iter,
+            steps: int, *, eval_fn=None, eval_every: int = 0) -> SimResult:
+    """Run the PS event loop.
+
+    grad_fn(params, batch) -> (grad_pytree, loss scalar)   (jitted by caller
+    or here).  batch_iter() yields batches.  ``steps`` counts server updates
+    (gradient pushes), so "effective passes" of data are steps * b and
+    comparable across algorithms, matching the paper's Fig. 2 x-axis.
+    """
+    M = cfg.num_workers
+    algo = cfg.algo
+    grad_fn = jax.jit(grad_fn)
+    lr_of = cfg.lr_schedule or (lambda t: cfg.lr)
+
+    # NOTE: no buffer donation — worker snapshots alias state.w across
+    # events, so donating the state would invalidate live snapshots.
+    push = jax.jit(functools.partial(
+        server_push, lam0=cfg.lambda0, m=cfg.dc_m, eps=cfg.dc_eps,
+        algo={"asgd": "asgd", "dc_asgd_c": "dc_asgd_c",
+              "dc_asgd_a": "dc_asgd_a"}.get(algo, "asgd")))
+    pull = jax.jit(server_pull)
+
+    state = init_server_state(init_params, M)
+    # every worker pulls w_0 at t=0 (paper: same random init for all algos)
+    snapshots = [state.w for _ in range(M)]
+    pull_version = [0] * M
+    version = 0
+
+    speeds = _worker_speeds(cfg)
+    worker_clock = np.zeros(M)
+    result = SimResult([], [], [], [], [])
+    sched = _schedule_iter(cfg)
+
+    if algo == "seq_sgd":
+        params = state.w
+        ms = tree_zeros_like(params)
+        clock = 0.0
+        for t in range(steps):
+            batch = next(batch_iter)
+            g, loss = grad_fn(params, batch)
+            eta = lr_of(t)
+            params = jax.tree.map(
+                lambda w, gl: (w.astype(jnp.float32) -
+                               eta * gl.astype(jnp.float32)).astype(w.dtype),
+                params, g)
+            clock += 1.0
+            _record(result, t, float(loss), t, clock, 0)
+        state = state._replace(w=params)
+        return _finish(result, state)
+
+    if algo == "ssgd":
+        params = state.w
+        clock = 0.0
+        t = 0
+        while t < steps:
+            grads = None
+            loss_acc = 0.0
+            for m in range(M):
+                g, loss = grad_fn(params, next(batch_iter))
+                grads = g if grads is None else tree_add(grads, g)
+                loss_acc += float(loss)
+            eta = lr_of(t)
+            gm = tree_scale(grads, 1.0 / M)
+            params = jax.tree.map(
+                lambda w, gl: (w.astype(jnp.float32) -
+                               eta * gl.astype(jnp.float32)).astype(w.dtype),
+                params, gm)
+            # barrier: wait for the slowest worker
+            clock += float(speeds.max()) + cfg.sync_overhead
+            _record(result, t, loss_acc / M, t * M + M, clock, 0)
+            t += M   # M gradient pushes worth of data per barrier
+        state = state._replace(w=params)
+        return _finish(result, state)
+
+    # --- asynchronous algorithms (asgd / dc_asgd_c / dc_asgd_a) ----------
+    for t in range(steps):
+        m = next(sched)
+        batch = next(batch_iter)
+        g, loss = grad_fn(snapshots[m], batch)
+        delay = version - pull_version[m]
+        state = push(state, g, jnp.int32(m), eta=lr_of(t))
+        version += 1
+        # worker m immediately pulls the fresh model
+        state = pull(state, jnp.int32(m))
+        snapshots[m] = state.w
+        pull_version[m] = version
+        worker_clock[m] += speeds[m]
+        _record(result, t, float(loss), t, float(worker_clock.max()), delay)
+    return _finish(result, state)
+
+
+def _record(result: SimResult, step, loss, passes, clock, delay):
+    result.steps.append(step)
+    result.losses.append(loss)
+    result.effective_passes.append(passes)
+    result.wallclock.append(clock)
+    result.delays.append(delay)
+
+
+def _finish(result: SimResult, state: ServerState):
+    result.final_state = state          # type: ignore[attr-defined]
+    return result

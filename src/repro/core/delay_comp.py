@@ -1,0 +1,96 @@
+"""The paper's contribution as a composable operator.
+
+``delay_compensated_gradient`` implements Eqn. (10)'s gradient correction:
+
+    g_dc = g(w_t) + lambda * g(w_t) ⊙ g(w_t) ⊙ (w_cur - w_bak)
+
+i.e. a first-order Taylor correction of the stale gradient with the
+Hessian approximated by ``Diag(lambda * g g^T)`` (Sec. 3.2).  The fused
+update (compensation + SGD step + adaptive MeanSquare, Eqn. 14) lives in
+``repro.kernels`` (Pallas) with ``ops.dc_update_tree`` as entry point; this
+module provides the algebra on pytrees plus the server-state container.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.utils.tree import tree_zeros_like
+
+Pytree = Any
+
+
+class ServerState(NamedTuple):
+    """Parameter-server state (Algorithm 2).
+
+    w      — global model.
+    w_bak  — per-worker backup snapshots, stacked on a leading [M] axis
+             (what worker m last pulled).
+    ms     — MeanSquare EMA (Eqn. 14), fp32, used by DC-ASGD-a.
+    t      — global update counter.
+    """
+    w: Pytree
+    w_bak: Pytree
+    ms: Pytree
+    t: jnp.ndarray
+
+
+def init_server_state(w: Pytree, num_workers: int) -> ServerState:
+    w_bak = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_workers,) + x.shape).copy(), w)
+    ms = tree_zeros_like(jax.tree.map(lambda x: x.astype(jnp.float32), w))
+    return ServerState(w=w, w_bak=w_bak, ms=ms, t=jnp.zeros((), jnp.int32))
+
+
+def delay_compensated_gradient(g: Pytree, w_cur: Pytree, w_bak: Pytree,
+                               lam) -> Pytree:
+    """Eqn. (10)'s compensated gradient, as a standalone pytree op."""
+    def leaf(gl, wl, bl):
+        gf = gl.astype(jnp.float32)
+        return gf + lam * gf * gf * (wl.astype(jnp.float32) -
+                                     bl.astype(jnp.float32))
+    return jax.tree.map(leaf, g, w_cur, w_bak)
+
+
+def taylor_remainder(g_true: Pytree, g_approx: Pytree):
+    """Diagnostic: ||g(w_{t+tau}) - g_dc||^2 vs ||g(w_{t+tau}) - g(w_t)||^2
+    is how EXPERIMENTS.md validates that compensation shrinks the gap."""
+    from repro.utils.tree import tree_sq_norm, tree_sub
+    return tree_sq_norm(tree_sub(g_true, g_approx))
+
+
+def server_push(state: ServerState, grad: Pytree, worker: jnp.ndarray, *,
+                eta, lam0: float, m: float = 0.95, eps: float = 1e-7,
+                algo: str = "dc_asgd_a") -> ServerState:
+    """Algorithm 2, "receive g_m" branch: one DC-ASGD server update.
+
+    ``algo``: dc_asgd_a | dc_asgd_c | asgd  (asgd == lambda 0, paper Sec. 5
+    discussion (3): ASGD is the lambda=0 extreme of DC-ASGD).
+    """
+    w_bak_m = jax.tree.map(lambda b: b[worker], state.w_bak)
+    if algo == "asgd":
+        lam0, adaptive = 0.0, False
+    elif algo == "dc_asgd_c":
+        adaptive = False
+    elif algo == "dc_asgd_a":
+        adaptive = True
+    else:
+        raise ValueError(algo)
+    w_new, ms_new = kops.dc_update_tree(
+        state.w, w_bak_m, grad, state.ms, eta=eta, lam0=lam0, m=m, eps=eps,
+        adaptive=adaptive)
+    if algo == "asgd":
+        ms_new = state.ms
+    return ServerState(w=w_new, w_bak=state.w_bak, ms=ms_new,
+                       t=state.t + 1)
+
+
+def server_pull(state: ServerState, worker: jnp.ndarray) -> ServerState:
+    """Algorithm 2, "pull request" branch: back up w for this worker."""
+    w_bak = jax.tree.map(
+        lambda b, w: b.at[worker].set(w.astype(b.dtype)), state.w_bak,
+        state.w)
+    return state._replace(w_bak=w_bak)

@@ -1,0 +1,10 @@
+from repro.data.synthetic import (
+    GaussianImages,
+    MarkovLM,
+    ShardInfo,
+    image_batch_iter,
+    lm_batch_iter,
+)
+
+__all__ = ["GaussianImages", "MarkovLM", "ShardInfo", "image_batch_iter",
+           "lm_batch_iter"]

@@ -1,0 +1,112 @@
+"""Deterministic synthetic datasets.
+
+The container is offline, so the CIFAR-10 / ImageNet experiments of the
+paper are replaced by deterministic synthetic tasks with real learnable
+structure (losses go down, generalization gaps exist), sized for CPU:
+
+* ``MarkovLM`` — token stream from a random sparse bigram chain mixed with
+  a zipfian unigram; an LM can reduce loss well below the unigram entropy
+  only by learning the transition structure.
+* ``GaussianImages`` — 10-class 32x32x3 gaussian-mixture images (class
+  templates + noise) for the ResNet-20 convergence reproduction, with
+  disjoint train/test splits.
+
+Everything is stateless-indexable: batch ``i`` of shard ``(s, n)`` is a pure
+function of (seed, i, s, n) so the async simulator, the threaded PS, and
+multi-host loaders all see reproducible, non-overlapping streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ShardInfo:
+    index: int = 0
+    count: int = 1
+
+
+class MarkovLM:
+    """Sparse-bigram language model data."""
+
+    def __init__(self, vocab: int = 2048, branching: int = 8, seed: int = 0,
+                 zipf_mix: float = 0.1):
+        self.vocab = vocab
+        self.seed = seed
+        self.zipf_mix = zipf_mix
+        rng = np.random.RandomState(seed)
+        # each token has `branching` likely successors
+        self.succ = rng.randint(0, vocab, size=(vocab, branching))
+        probs = rng.dirichlet(np.ones(branching) * 0.5, size=vocab)
+        self.succ_p = probs
+        zipf = 1.0 / np.arange(1, vocab + 1)
+        self.unigram = zipf / zipf.sum()
+
+    def batch(self, step: int, batch_size: int, seq_len: int,
+              shard: ShardInfo = ShardInfo()) -> dict:
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + step * 9176 + shard.index) % (2**31))
+        toks = np.empty((batch_size, seq_len + 1), np.int32)
+        toks[:, 0] = rng.randint(0, self.vocab, batch_size)
+        branching = self.succ.shape[1]
+        for t in range(seq_len):
+            use_zipf = rng.rand(batch_size) < self.zipf_mix
+            cum = np.cumsum(self.succ_p[toks[:, t]], axis=1)
+            choice = (rng.rand(batch_size)[:, None] < cum).argmax(axis=1)
+            nxt = self.succ[toks[:, t], choice]
+            z = rng.choice(self.vocab, size=batch_size, p=self.unigram)
+            toks[:, t + 1] = np.where(use_zipf, z, nxt)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class GaussianImages:
+    """10-class gaussian-mixture 32x32x3 image classification."""
+
+    def __init__(self, classes: int = 10, noise: float = 0.6, seed: int = 0,
+                 train_size: int = 4096, test_size: int = 1024):
+        self.classes = classes
+        self.noise = noise
+        self.seed = seed
+        rng = np.random.RandomState(seed)
+        self.templates = rng.randn(classes, 32, 32, 3).astype(np.float32)
+        # smooth templates so conv structure helps
+        for _ in range(2):
+            self.templates = 0.25 * (
+                np.roll(self.templates, 1, 1) + np.roll(self.templates, -1, 1)
+                + np.roll(self.templates, 1, 2) + np.roll(self.templates, -1, 2))
+        self.train_size = train_size
+        self.test_size = test_size
+
+    def _make(self, rng, n):
+        labels = rng.randint(0, self.classes, n)
+        imgs = (self.templates[labels] +
+                self.noise * rng.randn(n, 32, 32, 3).astype(np.float32))
+        return {"images": imgs.astype(np.float32), "labels": labels.astype(np.int32)}
+
+    def batch(self, step: int, batch_size: int,
+              shard: ShardInfo = ShardInfo()) -> dict:
+        rng = np.random.RandomState(
+            (self.seed * 7_368_787 + step * 5077 + shard.index * 31) % (2**31))
+        return self._make(rng, batch_size)
+
+    def test_set(self) -> dict:
+        rng = np.random.RandomState(self.seed + 123_456)
+        return self._make(rng, self.test_size)
+
+
+def lm_batch_iter(ds: MarkovLM, batch_size: int, seq_len: int,
+                  shard: ShardInfo = ShardInfo(), start_step: int = 0):
+    step = start_step
+    while True:
+        yield ds.batch(step, batch_size, seq_len, shard)
+        step += 1
+
+
+def image_batch_iter(ds: GaussianImages, batch_size: int,
+                     shard: ShardInfo = ShardInfo(), start_step: int = 0):
+    step = start_step
+    while True:
+        yield ds.batch(step, batch_size, shard)
+        step += 1

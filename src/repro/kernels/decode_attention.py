@@ -1,0 +1,105 @@
+"""Single-token decode attention against a KV cache, as a Pallas TPU
+kernel — the per-step hot loop of serving.
+
+Decode attention is memory-bound (the whole valid cache is read once per
+token); the kernel streams K/V HBM->VMEM in blocks, keeps the online
+softmax state in VMEM scratch, and skips blocks that are entirely beyond
+``kv_len`` or outside the sliding window (``pl.when`` on the block range),
+so a ring-buffered / short cache pays only for what it reads.
+
+Layout: q [B,Hq,hd] (one token per sequence), k/v [B,Hkv,S,hd], GQA via
+h -> h // G in the BlockSpec index maps.  ``kv_len`` and ``pos`` arrive as
+scalar operands so the same compiled kernel serves every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _decode_kernel(scalars_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, window, bk, nk):
+    j = pl.program_id(2)
+    kv_len = scalars_ref[0]
+    pos = scalars_ref[1]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[0] = NEG_INF
+        l_scr[0] = 0.0
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = j * bk
+    run = k_start < kv_len
+    if window and window > 0:
+        run = jnp.logical_and(run, k_start + bk - 1 > pos - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # [hd]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        logits = (k @ q) * scale                     # [bk]
+        kpos = k_start + jax.lax.iota(jnp.int32, bk)
+        mask = kpos < kv_len
+        if window and window > 0:
+            mask = jnp.logical_and(mask, kpos > pos - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev = m_scr[0]
+        m_cur = jnp.maximum(m_prev, logits.max())
+        corr = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(logits - m_cur)
+        p = jnp.where(mask, p, 0.0)
+        l_scr[0] = l_scr[0] * corr + p.sum()
+        acc_scr[...] = acc_scr[...] * corr + p @ v
+        m_scr[0] = m_cur
+
+    @pl.when(j == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[0], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret",
+                                             "block_k"))
+def decode_attention_3d(q, k, v, kv_len, pos, *, window=0, scale=None,
+                        interpret=False, block_k=DEFAULT_BLOCK_K):
+    """q [B,Hq,hd]; k,v [B,Hkv,S,hd]; kv_len/pos scalar int32.
+    Returns [B,Hq,hd].  S % block_k == 0 (ops.py pads)."""
+    B, Hq, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bk = min(block_k, S)
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    if scale is None:
+        scale = hd ** -0.5
+    scalars = jnp.stack([jnp.asarray(kv_len, jnp.int32),
+                         jnp.asarray(pos, jnp.int32)])
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nk),
+        in_specs=[
+            pl.BlockSpec((2,), lambda b, h, j: (0,)),
+            pl.BlockSpec((1, 1, hd), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((hd,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, q, k, v)

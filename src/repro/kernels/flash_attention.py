@@ -1,0 +1,120 @@
+"""Flash attention (causal / sliding-window, GQA-aware) as a Pallas TPU
+kernel.
+
+TPU adaptation of the memory-hierarchy insight behind FlashAttention:
+instead of GPU shared-memory tiles + warp shuffles, we tile HBM->VMEM with
+``BlockSpec`` and rely on the sequential TPU grid for the online-softmax
+running state, kept in VMEM scratch across the innermost (kv) grid steps.
+Block sizes are multiples of 128 to keep the MXU systolic array full.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); kv innermost so scratch
+(m, l, acc) carries the running softmax.  Causal/window blocks that are
+fully masked are skipped with ``pl.when`` (this is what makes sliding-
+window attention sub-quadratic here: only O(S * W / bk) blocks run).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, kv_len, bq, bk, nk):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    run = k_start < kv_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window and window > 0:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kp < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, kp <= qp)
+        if window and window > 0:
+            mask = jnp.logical_and(mask, kp > qp - window)
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_prev = m_scr[...]                           # [bq]
+        m_cur = jnp.maximum(m_prev, logits.max(axis=-1))
+        corr = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(logits - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None] +
+                        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "kv_len", "scale", "interpret", "block_q", "block_k"))
+def flash_attention_4d(q, k, v, *, causal=True, window=0, kv_len=None,
+                       scale=None, interpret=False,
+                       block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """q [B,Hq,Sq,hd]; k,v [B,Hkv,Skv,hd]; Sq % block_q == Skv % block_k == 0.
+    ``kv_len``: number of valid kv positions (<= Skv) for padded inputs.
+    Self-attention position alignment (q position i == kv position i).
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    nq, nk = Sq // bq, Skv // bk
+    if scale is None:
+        scale = hd ** -0.5
+    if kv_len is None:
+        kv_len = Skv
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        kv_len=kv_len, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

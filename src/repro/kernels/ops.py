@@ -1,0 +1,152 @@
+"""jit'd public wrappers for the Pallas kernels, with shape plumbing
+(padding / reshaping), a pure-jnp fallback (``ref.py``), and automatic
+``interpret=True`` on non-TPU backends.
+
+Selection: ``set_use_pallas(True)`` (or env ``REPRO_USE_PALLAS=1``) routes
+through the Pallas kernels; the default is the XLA/ref path so that CPU
+tests and benchmarks run at full speed while kernel tests exercise the
+Pallas path explicitly.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dc_update as _dc
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref
+from repro.kernels import rmsnorm as _rn
+
+_USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def set_use_pallas(flag: bool) -> None:
+    global _USE_PALLAS
+    _USE_PALLAS = bool(flag)
+
+
+def use_pallas() -> bool:
+    return _USE_PALLAS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    if not _USE_PALLAS:
+        return ref.rmsnorm(x, scale, eps)
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    block = min(_rn.BLOCK_ROWS, x2.shape[0])
+    x2, rows = _pad_to(x2, block, 0)
+    y = _rn.rmsnorm_2d(x2, scale, eps=eps, interpret=_interpret(),
+                       block_rows=block)
+    return y[:rows].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# dc_update: per-leaf fused server update over a whole parameter pytree
+# ---------------------------------------------------------------------------
+
+def dc_update_leaf(w, w_bak, g, ms, scalars, *, adaptive=True):
+    """w/w_bak/g/ms: same-shaped arrays; scalars [eta, lam0, m, eps] fp32."""
+    if not _USE_PALLAS:
+        eta, lam0, m, eps = scalars[0], scalars[1], scalars[2], scalars[3]
+        return ref.dc_update(w, w_bak, g, ms, eta=eta, lam0=lam0, m=m,
+                             eps=eps, adaptive=adaptive)
+    shape = w.shape
+    n = w.size
+    block = min(_dc.BLOCK, max(256, n))
+    flat = []
+    for a in (w, w_bak, g, ms):
+        f, _ = _pad_to(a.reshape(-1), block, 0)
+        flat.append(f)
+    w_new, ms_new = _dc.dc_update_flat(
+        flat[0], flat[1], flat[2], flat[3], scalars, adaptive=adaptive,
+        interpret=_interpret(), block=block)
+    return w_new[:n].reshape(shape), ms_new[:n].reshape(shape)
+
+
+def dc_update_tree(w_tree, bak_tree, g_tree, ms_tree, *, eta, lam0, m=0.95,
+                   eps=1e-7, adaptive=True):
+    scalars = jnp.stack([
+        jnp.asarray(eta, jnp.float32), jnp.asarray(lam0, jnp.float32),
+        jnp.asarray(m, jnp.float32), jnp.asarray(eps, jnp.float32)])
+    pairs = jax.tree.map(
+        lambda w, b, g, s: dc_update_leaf(w, b, g, s, scalars,
+                                          adaptive=adaptive),
+        w_tree, bak_tree, g_tree, ms_tree)
+    w_new = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda p: isinstance(p, tuple))
+    ms_new = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda p: isinstance(p, tuple))
+    return w_new, ms_new
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal=True, window=0):
+    """q [B,Sq,KV,G,hd]; k,v [B,Skv,KV,hd] (layers.py layout).
+    Returns [B,Sq,H,hd]."""
+    B, Sq, KV, G, hd = q.shape
+    Skv = k.shape[1]
+    qh = q.reshape(B, Sq, KV * G, hd).transpose(0, 2, 1, 3)   # [B,H,Sq,hd]
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    if not _USE_PALLAS:
+        out = ref.flash_attention(qh, kh, vh, causal=causal, window=window)
+    else:
+        bq = min(_fa.DEFAULT_BLOCK_Q, Sq)
+        bk = min(_fa.DEFAULT_BLOCK_K, Skv)
+        qh, sq0 = _pad_to(qh, bq, 2)
+        kh, skv0 = _pad_to(kh, bk, 2)
+        vh, _ = _pad_to(vh, bk, 2)
+        out = _fa.flash_attention_4d(
+            qh, kh, vh, causal=causal, window=window, kv_len=skv0,
+            interpret=_interpret(), block_q=bq, block_k=bk)
+        out = out[:, :, :sq0]
+    return out.transpose(0, 2, 1, 3)   # [B,Sq,H,hd]
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single token vs KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k, v, kv_len, pos, *, window=0):
+    """q [B,1,KV,G,hd]; k,v caches [B,S,KV,hd] (layers.py layout);
+    kv_len/pos scalars.  Returns [B,1,H,hd]."""
+    from repro.kernels import decode_attention as _da
+    B, _, KV, G, hd = q.shape
+    S = k.shape[1]
+    qh = q.reshape(B, KV * G, hd)
+    kh = k.transpose(0, 2, 1, 3)     # [B,KV,S,hd]
+    vh = v.transpose(0, 2, 1, 3)
+    if not _USE_PALLAS:
+        out = ref.decode_attention(qh, kh, vh, kv_len, pos, window=window)
+    else:
+        bk = min(_da.DEFAULT_BLOCK_K, S)
+        kh, s0 = _pad_to(kh, bk, 2)
+        vh, _ = _pad_to(vh, bk, 2)
+        out = _da.decode_attention_3d(qh, kh, vh, kv_len, pos, window=window,
+                                      interpret=_interpret(), block_k=bk)
+    return out[:, None]              # [B,1,H,hd]

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: tests sweep shapes/dtypes and
+``assert_allclose`` kernel outputs against these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dc_update — the DC-ASGD server update (paper Eqn. 10 + Eqn. 14)
+# ---------------------------------------------------------------------------
+
+def dc_update(w, w_bak, g, ms, *, eta, lam0, m=0.95, eps=1e-7,
+              adaptive=True):
+    """Delay-compensated parameter-server update.
+
+      ms'  = m * ms + (1 - m) * g**2                (Eqn. 14, adaptive only)
+      lam  = lam0 / sqrt(ms' + eps)   (adaptive)  |  lam0 (constant)
+      g_dc = g + lam * g * g * (w - w_bak)          (Eqn. 10)
+      w'   = w - eta * g_dc
+
+    All state fp32; returns (w', ms').
+    """
+    w32, b32, g32 = (a.astype(jnp.float32) for a in (w, w_bak, g))
+    if adaptive:
+        ms_new = m * ms.astype(jnp.float32) + (1.0 - m) * g32 * g32
+        lam = lam0 / jnp.sqrt(ms_new + eps)
+    else:
+        ms_new = ms.astype(jnp.float32)
+        lam = lam0
+    g_dc = g32 + lam * g32 * g32 * (w32 - b32)
+    w_new = w32 - eta * g_dc
+    return w_new.astype(w.dtype), ms_new
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal / sliding window), GQA-aware
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """q [B,Hq,Sq,hd]; k,v [B,Hkv,Skv,hd]; Hq % Hkv == 0.
+    Returns [B,Hq,Sq,hd]."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(B, Hkv, G, Sq, hd)
+    logits = jnp.einsum("bkgqh,bksh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Skv)[None, :]
+    # positions are aligned at the end (decode-style offset) when Sq != Skv
+    offset = Skv - Sq
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp <= qp + offset
+    if window and window > 0:
+        mask &= kp > qp + offset - window
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, Sq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single token vs KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k, v, kv_len, pos, *, window: int = 0,
+                     scale: float | None = None):
+    """q [B,Hq,hd]; k,v [B,Hkv,S,hd]; kv_len/pos scalar.  [B,Hq,hd]."""
+    B, Hq, hd = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(B, Hkv, G, hd)
+    logits = jnp.einsum("bkgh,bksh->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(S)
+    mask = kpos < kv_len
+    if window and window > 0:
+        mask = jnp.logical_and(mask, kpos > pos - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)

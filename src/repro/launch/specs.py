@@ -1,0 +1,271 @@
+"""Input specs + step builders for the dry-run: for every (arch x shape x
+mesh) this produces a step function, keyword ``ShapeDtypeStruct`` inputs
+(with shardings attached), and output shardings — no allocation anywhere.
+
+Shape kinds map to steps:
+  train_4k     -> train_step (sync baseline)  /  dc_round_step (multi-pod:
+                  the paper's per-pod DC-ASGD round)
+  prefill_32k  -> prefill
+  decode_32k   -> decode_step (one token, 32k KV cache)
+  long_500k    -> decode_step (one token, 524288 KV): SSM/hybrid native;
+                  attention archs run their sliding-window variant
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, RunConfig, ShapeConfig, get_config
+from repro.dist.sharding import (batch_axes, cache_shardings, param_shardings)
+from repro.models import decode_step, init as model_init, init_cache, prefill
+from repro.models.model import ShardingCtx
+from repro.optim.optimizers import get_optimizer
+from repro.train.train_step import build_dc_round_step, build_train_step
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+class StepSpec(NamedTuple):
+    name: str
+    fn: Any                      # callable(**kwargs)
+    kwargs: Dict[str, Any]       # name -> ShapeDtypeStruct pytree (sharded)
+    out_shardings: Any           # pytree or None
+    ctx: Any
+
+
+def _struct(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(tree, shardings):
+    return jax.tree.map(lambda x, s: _struct(x.shape, x.dtype, s), tree,
+                        shardings)
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                 technique: str = "baseline") -> ModelConfig:
+    """Shape/mesh-driven config adjustments (documented in DESIGN.md)."""
+    changes: dict = {}
+    if cfg.family == "moe":
+        changes["moe_impl"] = "ep_a2a"
+    if shape.name == "long_500k" and cfg.family in (
+            "dense", "vlm", "moe", "encdec") and not cfg.sliding_window:
+        # dense archs run the long-context shape only with the documented
+        # sliding-window variant (sub-quadratic condition)
+        changes["sliding_window"] = LONG_CONTEXT_WINDOW
+    if shape.kind == "train":
+        changes["remat"] = "full"
+    else:
+        changes["remat"] = "none"
+    return cfg.with_(**changes) if changes else cfg
+
+
+def make_ctx(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+             seq_parallel: bool = True) -> ShardingCtx:
+    ba = batch_axes(mesh)
+    act = None
+    if (seq_parallel and shape.kind == "train" and
+            shape.seq_len % mesh.shape.get("model", 1) == 0):
+        act = NamedSharding(mesh, P(ba, "model", None))
+    return ShardingCtx(mesh=mesh, batch_axes=ba, model_axis="model",
+                       moe_cap_factor=cfg.capacity_factor,
+                       activation_sharding=act)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(model_init, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _batch_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                   *, pods: int = 0):
+    """Token batch ShapeDtypeStructs for training (optionally pod-stacked)."""
+    ba = batch_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    lead: tuple = ()
+    spec_lead: tuple = ()
+    if pods:
+        lead = (pods,)
+        spec_lead = ("pod",)
+        ba = tuple(a for a in ba if a != "pod")
+        B = B // pods
+    bspec = ba if (ba and B % _axsize(mesh, ba) == 0) else None
+    tok = NamedSharding(mesh, P(*spec_lead, bspec, None))
+    batch = {
+        "tokens": _struct(lead + (B, S), jnp.int32, tok),
+        "labels": _struct(lead + (B, S), jnp.int32, tok),
+    }
+    if cfg.family == "encdec":
+        fr = NamedSharding(mesh, P(*spec_lead, bspec, None, None))
+        batch["frames"] = _struct(
+            lead + (B, cfg.num_frontend_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype), fr)
+    return batch
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# step spec builders
+# ---------------------------------------------------------------------------
+
+def train_spec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               run: Optional[RunConfig] = None) -> StepSpec:
+    run = run or RunConfig(optimizer="momentum", momentum=0.9)
+    cfg = adapt_config(cfg, shape, mesh)
+    ctx = make_ctx(cfg, shape, mesh)
+    ap = abstract_params(cfg)
+    pshard = param_shardings(cfg, mesh, ap, fsdp=run.fsdp)
+    init_opt, step = build_train_step(cfg, run, ctx)
+    aopt = jax.eval_shape(init_opt, ap)
+    kwargs = {
+        "params": _with_shardings(ap, pshard),
+        "opt_state": _opt_structs(cfg, mesh, run, ap, aopt),
+        "batch": _batch_structs(cfg, shape, mesh),
+        "lr": _struct((), jnp.float32),
+    }
+    out_shardings = (pshard, None, None)   # params', opt', metrics
+    return StepSpec(f"train[{run.optimizer}]",
+                    lambda params, opt_state, batch, lr: step(
+                        params, opt_state, batch, lr),
+                    kwargs, out_shardings, ctx)
+
+
+def _opt_structs(cfg, mesh, run, ap, aopt):
+    """Optimizer-state structs: momentum/adam moments mirror param tree."""
+    pshard = param_shardings(cfg, mesh, ap, fsdp=run.fsdp)
+
+    def map_state(st):
+        if isinstance(st, dict):
+            out = {}
+            for k, v in st.items():
+                if k in ("mu", "m", "v"):
+                    out[k] = _with_shardings(v, pshard)
+                else:
+                    out[k] = jax.tree.map(
+                        lambda x: _struct(x.shape, x.dtype,
+                                          NamedSharding(mesh, P())), v)
+            return out
+        return jax.tree.map(
+            lambda x: _struct(x.shape, x.dtype, NamedSharding(mesh, P())),
+            st)
+    return map_state(aopt) if aopt != () else ()
+
+
+def dc_round_spec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                  run: Optional[RunConfig] = None) -> StepSpec:
+    """The paper's technique on the multi-pod mesh (pods = DC-ASGD workers)."""
+    assert "pod" in mesh.axis_names, "dc_round_spec needs the multi-pod mesh"
+    n_pods = mesh.shape["pod"]
+    run = run or RunConfig(optimizer="dc_asgd_a", lambda0=2.0)
+    cfg = adapt_config(cfg, shape, mesh)
+    ctx = make_ctx(cfg, shape, mesh)
+    ap = abstract_params(cfg)
+    pshard = param_shardings(cfg, mesh, ap, fsdp=run.fsdp)
+    stack_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, P("pod", *s.spec)), pshard)
+    ams = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+                       ap)
+    msshard = pshard
+    snap_dt = jnp.dtype(run.snapshot_dtype)
+    astack = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n_pods,) + x.shape, snap_dt), ap)
+    step = build_dc_round_step(cfg, run, n_pods, ctx)
+    kwargs = {
+        "w": _with_shardings(ap, pshard),
+        "w_stack": _with_shardings(astack, stack_shard),
+        "ms": _with_shardings(ams, msshard),
+        "batch": _batch_structs(cfg, shape, mesh, pods=n_pods),
+        "lr": _struct((), jnp.float32),
+    }
+    out_shardings = (pshard, stack_shard, msshard, None)
+    return StepSpec("dc_round[dc_asgd_a]",
+                    lambda w, w_stack, ms, batch, lr: step(
+                        w, w_stack, ms, batch, lr),
+                    kwargs, out_shardings, ctx)
+
+
+def prefill_spec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> StepSpec:
+    cfg = adapt_config(cfg, shape, mesh)
+    ctx = make_ctx(cfg, shape, mesh, seq_parallel=False)
+    ap = abstract_params(cfg)
+    pshard = param_shardings(cfg, mesh, ap, fsdp=False)
+    B, S = shape.global_batch, shape.seq_len
+    ac = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, jnp.dtype(cfg.dtype)))
+    cshard = cache_shardings(cfg, mesh, shape, ac)
+    batch = _batch_structs(cfg, shape, mesh)
+    batch.pop("labels")
+    # constrain per-layer k/v writes to the cache layout (minus the L dim)
+    if "k" in ac:
+        import dataclasses as _dc
+        from repro.dist.sharding import cache_spec as _cspec
+        kspec = _cspec(cfg, mesh, shape, "k", ac["k"].shape)
+        ctx = _dc.replace(ctx, kv_write_sharding=NamedSharding(
+            mesh, P(*kspec[1:])))
+
+    def fn(params, batch, cache):
+        return prefill(cfg, params, batch, cache, ctx)
+    kwargs = {
+        "params": _with_shardings(ap, pshard),
+        "batch": batch,
+        "cache": _with_shardings(ac, cshard),
+    }
+    return StepSpec("prefill", fn, kwargs, (None, cshard), ctx)
+
+
+def decode_spec(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                technique: str = "baseline") -> StepSpec:
+    cfg = adapt_config(cfg, shape, mesh)
+    ctx = make_ctx(cfg, shape, mesh, seq_parallel=False)
+    if technique == "opt_decode":
+        import dataclasses as _dc
+        ctx = _dc.replace(ctx, sharded_decode_attn=True)
+        # unroll the layer loop: a lax.scan's cache loop-variable gets
+        # replicated by the SPMD partitioner (full KV all-gather per step);
+        # unrolled, each layer touches only its local cache shard
+        cfg = cfg.with_(unroll_layers=True)
+    ap = abstract_params(cfg)
+    pshard = param_shardings(cfg, mesh, ap, fsdp=False)
+    B, S = shape.global_batch, shape.seq_len
+    ac = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, jnp.dtype(cfg.dtype)))
+    cshard = cache_shardings(cfg, mesh, shape, ac)
+    ba = batch_axes(mesh)
+    bspec = ba if (ba and B % _axsize(mesh, ba) == 0) else None
+    tok = NamedSharding(mesh, P(bspec, None))
+
+    def fn(params, tokens, cache, pos):
+        return decode_step(cfg, params, tokens, cache, pos, ctx)
+    kwargs = {
+        "params": _with_shardings(ap, pshard),
+        "tokens": _struct((B, 1), jnp.int32, tok),
+        "cache": _with_shardings(ac, cshard),
+        "pos": _struct((), jnp.int32),
+    }
+    return StepSpec("decode", fn, kwargs, (None, cshard), ctx)
+
+
+def make_step_spec(arch: str, shape_name: str, mesh: Mesh,
+                   technique: str = "baseline",
+                   cfg: Optional[ModelConfig] = None) -> StepSpec:
+    """technique: baseline | dc_round (train shapes on the multi-pod mesh)."""
+    cfg = cfg or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        if technique == "dc_round":
+            return dc_round_spec(cfg, shape, mesh)
+        return train_spec(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_spec(cfg, shape, mesh)
+    return decode_spec(cfg, shape, mesh, technique=technique)

@@ -1,0 +1,73 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tiny-lm \
+      --optimizer dc_asgd_a --workers 4 --steps 200
+
+Runs the DC-ASGD parameter-server loop (or a synchronous baseline) on the
+selected architecture's *reduced* variant by default (CPU container); pass
+``--full`` to use the production config (expects real accelerators).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-lm")
+    ap.add_argument("--optimizer", default="dc_asgd_a",
+                    choices=("sgd", "momentum", "adam", "dc_ssgd", "asgd",
+                             "ssgd", "dc_asgd_c", "dc_asgd_a"))
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--lambda0", type=float, default=0.04)
+    ap.add_argument("--schedule", default="roundrobin",
+                    choices=("roundrobin", "random", "heterogeneous"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--log-json", default="")
+    args = ap.parse_args()
+
+    from repro.configs import RunConfig, get_config
+    from repro.data import MarkovLM, lm_batch_iter
+    from repro.train import AsyncTrainer, Trainer
+
+    cfg = get_config(args.arch)
+    if not args.full and args.arch != "tiny-lm":
+        cfg = cfg.reduced()
+    run = RunConfig(
+        arch=args.arch, optimizer=args.optimizer, learning_rate=args.lr,
+        lambda0=args.lambda0, num_workers=args.workers, steps=args.steps,
+        delay_schedule=args.schedule, seed=args.seed,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=max(args.steps // 4, 1))
+    ds = MarkovLM(vocab=cfg.vocab_size, seed=args.seed)
+    it = lm_batch_iter(ds, args.batch, args.seq)
+
+    if args.optimizer in ("sgd", "momentum", "adam", "dc_ssgd"):
+        tr = Trainer(cfg, run)
+        tr.fit(it)
+        log = {"steps": tr.log.steps, "losses": tr.log.losses,
+               "times": tr.log.times}
+    else:
+        at = AsyncTrainer(cfg, run)
+        _, res = at.fit(it)
+        log = {"steps": res.steps[::max(run.log_every, 1)],
+               "losses": res.losses[::max(run.log_every, 1)],
+               "wallclock": res.wallclock[::max(run.log_every, 1)],
+               "mean_delay": sum(res.delays) / max(len(res.delays), 1)}
+    print(json.dumps({k: (v if not isinstance(v, list) else v[-5:])
+                      for k, v in log.items()}, indent=1))
+    if args.log_json:
+        with open(args.log_json, "w") as f:
+            json.dump(log, f)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,12 @@
+from repro.models.model import (
+    ShardingCtx,
+    decode_step,
+    forward,
+    init,
+    init_cache,
+    loss_fn,
+    prefill,
+)
+
+__all__ = ["ShardingCtx", "decode_step", "forward", "init", "init_cache",
+           "loss_fn", "prefill"]

@@ -1,0 +1,85 @@
+"""ResNet-20 for CIFAR-style inputs — the paper's own experimental model
+(He et al. 2016, used in DC-ASGD Sec. 6.1).  BatchNorm is replaced by
+GroupNorm (8 groups) so the model stays a pure function of (params, batch):
+running statistics would leak state across the async workers of the
+DC-ASGD simulator and confound the comparison (deviation noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _conv_init(key, shape):  # HWIO
+    fan_in = shape[0] * shape[1] * shape[2]
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, shape, jnp.float32) * std
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _init_gn(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _gn(p, x, groups=8, eps=1e-5):
+    N, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(N, H, W, g, C // g).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(N, H, W, C) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def init_resnet(cfg: ModelConfig, key, n_blocks: int = 3):
+    """ResNet-6n+2 with n=3 -> 20 layers; widths (w, 2w, 4w), w=cfg.d_model."""
+    w = cfg.d_model
+    ks = iter(jax.random.split(key, 64))
+    p = {"stem": _conv_init(next(ks), (3, 3, 3, w)), "stem_gn": _init_gn(w),
+         "stages": []}
+    cin = w
+    for si, cout in enumerate((w, 2 * w, 4 * w)):
+        stage = []
+        for bi in range(n_blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {
+                "c1": _conv_init(next(ks), (3, 3, cin, cout)),
+                "g1": _init_gn(cout),
+                "c2": _conv_init(next(ks), (3, 3, cout, cout)),
+                "g2": _init_gn(cout),
+            }
+            if stride != 1 or cin != cout:
+                blk["proj"] = _conv_init(next(ks), (1, 1, cin, cout))
+            stage.append(blk)
+            cin = cout
+        p["stages"].append(stage)
+    p["head_w"] = jax.random.normal(next(ks), (cin, cfg.vocab_size),
+                                    jnp.float32) * (1.0 / cin) ** 0.5
+    p["head_b"] = jnp.zeros((cfg.vocab_size,), jnp.float32)
+    return p
+
+
+def forward_resnet(cfg: ModelConfig, p, images):
+    """images [B,32,32,3] -> logits [B, classes]."""
+    x = _gn(p["stem_gn"], _conv(images, p["stem"]))
+    x = jax.nn.relu(x)
+    for si, stage in enumerate(p["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = jax.nn.relu(_gn(blk["g1"], _conv(x, blk["c1"], stride)))
+            h = _gn(blk["g2"], _conv(h, blk["c2"]))
+            sc = _conv(x, blk["proj"], stride) if "proj" in blk else x
+            x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(1, 2))
+    return x @ p["head_w"] + p["head_b"]

@@ -1,0 +1,118 @@
+"""Sequence-parallel decode attention (§Perf optimization, beyond-paper).
+
+Baseline behavior: with the KV cache sharded over the ``model`` axis on the
+sequence dimension, XLA's SPMD partitioner all-gathers the ENTIRE cache per
+layer to execute the dynamic cache update + attention (measured 34 GB/layer
+for chameleon-34b decode_32k — see EXPERIMENTS.md §Perf iteration 1).
+
+This module replaces that with an explicit ``shard_map``:
+  * the new k/v token is written ONLY on the shard that owns position
+    ``pos`` (conditional local dynamic_update_slice, zero communication);
+  * attention runs as a two-pass distributed softmax: local partial
+    max/sum/weighted-V followed by ``pmax``/``psum`` over the model axis —
+    the only cross-device traffic is O(B x H x hd) per layer instead of
+    O(B x S x KV x hd).
+
+The q/k/v/o projections stay OUTSIDE the region (ordinary tensor-parallel
+matmuls under XLA auto sharding); only the cache-touch + softmax core is
+manual.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _project_qkv
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def _local_core(cfg: ModelConfig, model_axis: str, pos, q, knew, vnew,
+                ck, cv):
+    """Per-device body.  q [B,1,KV,G,hd]; knew/vnew [B,1,KV,hd];
+    ck/cv [B, S_l, KV, hd] (local sequence shard)."""
+    B, S_l = ck.shape[0], ck.shape[1]
+    j = jax.lax.axis_index(model_axis)
+    start = j * S_l
+
+    # ---- conditional local cache write (no communication) ----
+    local_pos = jnp.clip(pos - start, 0, S_l - 1)
+    in_range = jnp.logical_and(pos >= start, pos < start + S_l)
+    cur_k = jax.lax.dynamic_slice(ck, (0, local_pos, 0, 0),
+                                  (B, 1, ck.shape[2], ck.shape[3]))
+    cur_v = jax.lax.dynamic_slice(cv, (0, local_pos, 0, 0),
+                                  (B, 1, cv.shape[2], cv.shape[3]))
+    new_k = jnp.where(in_range, knew.astype(ck.dtype), cur_k)
+    new_v = jnp.where(in_range, vnew.astype(cv.dtype), cur_v)
+    ck = jax.lax.dynamic_update_slice(ck, new_k, (0, local_pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, new_v, (0, local_pos, 0, 0))
+
+    # ---- local partial attention ----
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, ck.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * scale
+    kpos = start + jnp.arange(S_l)
+    mask = kpos[None, None, None, None, :] <= pos
+    if cfg.sliding_window:
+        mask = jnp.logical_and(
+            mask, kpos[None, None, None, None, :] > pos - cfg.sliding_window)
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+
+    m_local = logits.max(axis=-1)                                 # [B,KV,G,1]
+    m = jax.lax.pmax(m_local, model_axis)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    s_local = p.sum(axis=-1)
+    o_local = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(cv.dtype),
+                         cv, preferred_element_type=jnp.float32)
+    s = jax.lax.psum(s_local, model_axis)                         # [B,KV,G,1]
+    o = jax.lax.psum(o_local.astype(jnp.float32), model_axis)
+    o = o / jnp.maximum(s, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return o.astype(q.dtype), ck, cv
+
+
+def attention_decode_sharded(p, cfg: ModelConfig, x, pos, cache_k, cache_v,
+                             ctx):
+    """Drop-in for layers.attention_decode when ctx.mesh is set and the
+    cache is sequence-sharded over ctx.model_axis."""
+    mesh = ctx.mesh
+    ma = ctx.model_axis
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, knew, vnew = _project_qkv(p, cfg, x, x, positions, positions)
+
+    ba = []
+    prod = 1
+    for a in ctx.batch_axes:
+        if B % (prod * mesh.shape[a]) == 0:
+            ba.append(a)
+            prod *= mesh.shape[a]
+    bspec = tuple(ba) if ba else None
+    S = cache_k.shape[1]
+    seq_ax = ma if S % mesh.shape[ma] == 0 else None
+    if seq_ax is None:   # cannot shard the sequence: fall back
+        from repro.models.layers import attention_decode
+        out, ck, cv = attention_decode(p, cfg, x, pos, cache_k, cache_v)
+        return out, ck, cv
+
+    cspec = P(bspec, seq_ax, None, None)
+    rep4 = P(bspec, None, None, None)
+    rep5 = P(bspec, None, None, None, None)
+    body = partial(_local_core, cfg, ma)
+    o, ck, cv = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), rep5, rep4, rep4, cspec, cspec),
+        out_specs=(rep5, cspec, cspec),
+        check_vma=False,
+    )(pos, q, knew, vnew, cache_k, cache_v)
+    B_, Sq = o.shape[0], o.shape[1]
+    out = o.reshape(B_, Sq, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return out, ck, cv

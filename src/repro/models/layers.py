@@ -1,0 +1,314 @@
+"""Core neural-net layers, pure-JAX functional style.
+
+Params are plain nested dicts; every layer is ``init_*(key, cfg) -> params``
+plus an apply function.  All matmuls accumulate in fp32
+(``preferred_element_type``), softmax/norms run in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        jnp.prod(jnp.array([shape[a] for a in in_axis])))
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    from repro.kernels import ops as kops
+    return kops.rmsnorm(x, p["scale"], eps=eps)
+
+
+def init_layernorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary / positional embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d: int):
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((max_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d, qd)),
+        "wk": dense_init(ks[1], (d, kvd)),
+        "wv": dense_init(ks[2], (d, kvd)),
+        "wo": dense_init(ks[3], (qd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, xq, xkv, q_positions, kv_positions):
+    """Returns q [B,Sq,KV,G,hd], k [B,Skv,KV,hd], v [B,Skv,KV,hd]."""
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    KV, G, hd = cfg.num_kv_heads, cfg.group_size, cfg.head_dim
+    dt = xq.dtype
+    q = (xq @ p["wq"].astype(dt)).reshape(B, Sq, cfg.num_heads, hd)
+    k = (xkv @ p["wk"].astype(dt)).reshape(B, Skv, KV, hd)
+    v = (xkv @ p["wv"].astype(dt)).reshape(B, Skv, KV, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt).reshape(cfg.num_heads, hd)
+        k = k + p["bk"].astype(dt).reshape(KV, hd)
+        v = v + p["bv"].astype(dt).reshape(KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_theta > 0 and q_positions is not None:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    q = q.reshape(B, Sq, KV, G, hd)
+    return q, k, v
+
+
+def attention_scores(cfg: ModelConfig, q, k, v, mask):
+    """q [B,Sq,KV,G,hd], k/v [B,Skv,KV,hd], mask broadcastable to
+    [B,KV,G,Sq,Skv] (True = attend).  Returns [B,Sq,KV*G*hd]."""
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    B, Sq = out.shape[0], out.shape[1]
+    return out.reshape(B, Sq, cfg.q_dim)
+
+
+def make_mask(q_positions, kv_positions, *, causal: bool, window: int,
+              kv_valid_len=None):
+    """Boolean [.., Sq, Skv] attend mask from absolute positions."""
+    qp = q_positions[..., :, None]
+    kp = kv_positions[..., None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        mask &= kp <= qp
+    if window and window > 0:
+        mask &= kp > qp - window
+    if kv_valid_len is not None:
+        mask &= kp < kv_valid_len
+    return mask
+
+
+def banded_attention_scores(cfg: ModelConfig, q, k, v):
+    """Sliding-window attention computed block-banded: sequence blocks of
+    width W = sliding_window attend only (previous block, own block), so
+    logits are O(S * 2W) instead of O(S^2) — §Perf iteration for SWA archs
+    (hymba trains with W=1024; 16x less attention memory at 32k prefill).
+    Requires S % W == 0 (caller falls back otherwise)."""
+    B, S, KV, G, hd = q.shape
+    W = cfg.sliding_window
+    nb = S // W
+    scale = 1.0 / math.sqrt(hd)
+    qb = q.reshape(B, nb, W, KV, G, hd)
+    kb = k.reshape(B, nb, W, KV, hd)
+    vb = v.reshape(B, nb, W, KV, hd)
+    k2 = jnp.concatenate(
+        [jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], 1), kb],
+        axis=2)                                   # [B,nb,2W,KV,hd]
+    v2 = jnp.concatenate(
+        [jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], 1), vb],
+        axis=2)
+    logits = jnp.einsum("bnwkgh,bnxkh->bnkgwx", qb, k2,
+                        preferred_element_type=jnp.float32) * scale
+    w_idx = jnp.arange(W)[:, None]                # query offset in block
+    x_idx = jnp.arange(2 * W)[None, :]            # key offset (block n-1 + n)
+    rel = x_idx - W - w_idx                       # kpos - qpos
+    mask = (rel <= 0) & (rel > -W)
+    # block 0 has no predecessor: keys with x < W are padding there
+    first = jnp.arange(nb)[:, None, None] > 0
+    valid = first | (x_idx >= W)[None]
+    mask = mask[None] & valid
+    logits = jnp.where(mask[:, None, None], logits,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bnkgwx,bnxkh->bnwkgh", probs.astype(v.dtype), v2,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return out.reshape(B, S, cfg.q_dim)
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, causal=True,
+              use_flash: bool = False):
+    """Self-attention over a full sequence (training / prefill compute)."""
+    if positions is None:
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions)
+    S = x.shape[1]
+    W = cfg.sliding_window
+    if use_flash:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=W)
+        B, Sq = x.shape[0], x.shape[1]
+        out = out.reshape(B, Sq, cfg.q_dim)
+    elif causal and W and S % W == 0 and S >= 2 * W:
+        out = banded_attention_scores(cfg, q, k, v)
+    else:
+        mask = make_mask(positions, positions, causal=causal, window=W)
+        mask = mask[:, None, None]   # [B,1,1,Sq,Skv]
+        out = attention_scores(cfg, q, k, v, mask)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def cross_attention(p, cfg: ModelConfig, x, enc, enc_positions=None):
+    q, k, v = _project_qkv(p, cfg, x, enc, None, None)
+    Skv = enc.shape[1]
+    mask = jnp.ones((1, 1, 1, 1, Skv), bool)
+    out = attention_scores(cfg, q, k, v, mask)
+    return out @ p["wo"].astype(x.dtype)
+
+
+# -- KV-cache variants ------------------------------------------------------
+
+def attention_prefill(p, cfg: ModelConfig, x, positions, cache_k, cache_v,
+                      *, causal=True):
+    """Run full-sequence attention AND write k/v into the cache at [0, S)."""
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions)
+    S, W = x.shape[1], cfg.sliding_window
+    if causal and W and S % W == 0 and S >= 2 * W:
+        out = banded_attention_scores(cfg, q, k, v)
+    else:
+        mask = make_mask(positions, positions, causal=causal,
+                         window=W)[:, None, None]
+        out = attention_scores(cfg, q, k, v, mask)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), 0, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), 0, axis=1)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def attention_decode(p, cfg: ModelConfig, x, pos, cache_k, cache_v):
+    """Single-token decode: x [B,1,D], pos scalar int32 (current position).
+    cache_k/v [B,Smax,KV,hd]; returns output + updated caches."""
+    B = x.shape[0]
+    Smax = cache_k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    kv_pos = jnp.arange(Smax, dtype=jnp.int32)[None, :]
+    mask = make_mask(positions, kv_pos, causal=True, window=cfg.sliding_window,
+                     kv_valid_len=pos + 1)[:, None, None]
+    out = attention_scores(cfg, q, cache_k.astype(x.dtype),
+                           cache_v.astype(x.dtype), mask)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU) and whisper-style GELU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, ff, gated=True):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, ff)), "w_down": dense_init(ks[1], (ff, d))}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, ff))
+    return p
+
+
+def mlp(p, x):
+    dt = x.dtype
+    up = x @ p["w_up"].astype(dt)
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d):
+    return {"table": embed_init(key, (vocab, d))}
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x):
+    # logits always fp32 for a stable softmax-xent
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+def init_head(key, d, vocab):
+    return {"w": dense_init(key, (d, vocab))}
+
+
+def head(p, x):
+    return x.astype(jnp.float32) @ p["w"].astype(jnp.float32)

@@ -1,0 +1,581 @@
+"""Model zoo assembly: init / forward / loss / prefill / decode for every
+assigned architecture family.
+
+Families:
+  dense | vlm ........ decoder LM (GQA, optional qk-norm/bias/SWA); vlm is
+                       early-fusion so the input is a plain token stream.
+  moe ................ decoder LM with MoE FFN (dense oracle or EP all-to-all).
+  hybrid ............. hymba: parallel attention + mamba heads per block.
+  ssm ................ xlstm: mLSTM / sLSTM blocks per ``block_pattern``.
+  encdec ............. whisper backbone: bidirectional encoder over stubbed
+                       frame embeddings + causal decoder with cross-attention.
+  cnn ................ resnet-cifar (the paper's own experimental model).
+
+Homogeneous stacks are scanned (``lax.scan`` over stacked layer params) so
+HLO size and compile time are O(1) in depth; xlstm's heterogeneous pattern
+uses a per-layer Python loop (12 layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.models.cnn import forward_resnet, init_resnet
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    """Threaded through model code when running under a mesh."""
+    mesh: Any = None
+    batch_axes: tuple = ("data",)
+    model_axis: str = "model"
+    moe_cap_factor: Optional[float] = None
+    use_flash: bool = False
+    # sequence-parallel residual stream (Megatron-SP style): constraint
+    # applied to x between blocks so stashed activations shard over 'model'
+    activation_sharding: Any = None
+    # §Perf: shard_map'd decode attention (local cache write + distributed
+    # two-pass softmax) instead of letting XLA all-gather the KV cache
+    sharded_decode_attn: bool = False
+    # explicit sharding for per-layer k/v cache writes [B,S,KV,hd]: prevents
+    # the SPMD partitioner from picking a head-sharded layout for fresh k/v
+    # and then "involuntarily fully rematerializing" into the seq-sharded
+    # cache (observed on prefill_32k; see EXPERIMENTS.md §Perf iteration 4)
+    kv_write_sharding: Any = None
+
+
+def _constrain_kv(t, ctx):
+    if ctx is not None and ctx.kv_write_sharding is not None:
+        return jax.lax.with_sharding_constraint(t, ctx.kv_write_sharding)
+    return t
+
+
+def _constrain(x, ctx):
+    if ctx is not None and ctx.activation_sharding is not None:
+        return jax.lax.with_sharding_constraint(x, ctx.activation_sharding)
+    return x
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# blocks
+# ===========================================================================
+
+def init_dense_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+        if cfg.num_shared_experts:
+            p["shared"] = L.init_mlp(ks[2], cfg.d_model, cfg.shared_d_ff)
+            p["shared_gate"] = L.dense_init(jax.random.fold_in(ks[2], 1),
+                                            (cfg.d_model, 1))
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def dense_block(p, cfg: ModelConfig, x, positions, ctx):
+    h = x + L.attention(p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        positions, causal=True,
+                        use_flash=bool(ctx and ctx.use_flash))
+    y = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux, _ = MOE.moe_block(p["moe"], cfg, y, ctx)
+        if cfg.num_shared_experts:
+            g = jax.nn.sigmoid(y.astype(jnp.float32) @ p["shared_gate"])
+            f = f + (L.mlp(p["shared"], y).astype(jnp.float32) * g).astype(f.dtype)
+    else:
+        f, aux = L.mlp(p["mlp"], y), 0.0
+    return h + f, aux
+
+
+def dense_block_prefill(p, cfg, x, positions, ck, cv):
+    a, ck, cv = L.attention_prefill(
+        p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps), positions,
+        ck, cv, causal=True)
+    h = x + a
+    y = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if cfg.family == "moe":
+        f, _, _ = MOE.moe_block(p["moe"], cfg, y, None)
+        if cfg.num_shared_experts:
+            g = jax.nn.sigmoid(y.astype(jnp.float32) @ p["shared_gate"])
+            f = f + (L.mlp(p["shared"], y).astype(jnp.float32) * g).astype(f.dtype)
+    else:
+        f = L.mlp(p["mlp"], y)
+    return h + f, ck, cv
+
+
+def dense_block_decode(p, cfg, x, pos, ck, cv, ctx=None):
+    y = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if ctx is not None and ctx.sharded_decode_attn and ctx.mesh is not None:
+        from repro.models.decode_attn import attention_decode_sharded
+        a, ck, cv = attention_decode_sharded(p["attn"], cfg, y, pos, ck, cv,
+                                             ctx)
+    else:
+        a, ck, cv = L.attention_decode(p["attn"], cfg, y, pos, ck, cv)
+    h = x + a
+    y = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if cfg.family == "moe":
+        f, _, _ = MOE.moe_block(p["moe"], cfg, y, ctx)
+        if cfg.num_shared_experts:
+            g = jax.nn.sigmoid(y.astype(jnp.float32) @ p["shared_gate"])
+            f = f + (L.mlp(p["shared"], y).astype(jnp.float32) * g).astype(f.dtype)
+    else:
+        f = L.mlp(p["mlp"], y)
+    return h + f, ck, cv
+
+
+# --- hybrid (hymba): parallel attention + mamba heads ----------------------
+
+def init_hybrid_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg),
+        "mamba": SSM.init_mamba(ks[1], cfg),
+        "attn_norm": L.init_rmsnorm(cfg.d_model),
+        "ssm_norm": L.init_rmsnorm(cfg.d_model),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def hybrid_block(p, cfg, x, positions, ctx):
+    y = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a = L.attention(p["attn"], cfg, y, positions, causal=True,
+                    use_flash=bool(ctx and ctx.use_flash))
+    s, _ = SSM.mamba_seq(p["mamba"], cfg, y)
+    fused = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.norm_eps) +
+                   L.rmsnorm(p["ssm_norm"], s, cfg.norm_eps))
+    h = x + fused
+    return h + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps)), 0.0
+
+
+def hybrid_block_prefill(p, cfg, x, positions, ck, cv, conv, hs):
+    y = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, ck, cv = L.attention_prefill(p["attn"], cfg, y, positions, ck, cv,
+                                    causal=True)
+    s, (conv, hs) = SSM.mamba_seq(p["mamba"], cfg, y, conv, hs)
+    fused = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.norm_eps) +
+                   L.rmsnorm(p["ssm_norm"], s, cfg.norm_eps))
+    h = x + fused
+    return (h + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps)),
+            ck, cv, conv, hs)
+
+
+def hybrid_block_decode(p, cfg, x, pos, ck, cv, conv, hs, ctx=None):
+    y = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if ctx is not None and ctx.sharded_decode_attn and ctx.mesh is not None:
+        from repro.models.decode_attn import attention_decode_sharded
+        a, ck, cv = attention_decode_sharded(p["attn"], cfg, y, pos, ck, cv,
+                                             ctx)
+    else:
+        a, ck, cv = L.attention_decode(p["attn"], cfg, y, pos, ck, cv)
+    s, (conv, hs) = SSM.mamba_decode(p["mamba"], cfg, y, (conv, hs))
+    fused = 0.5 * (L.rmsnorm(p["attn_norm"], a, cfg.norm_eps) +
+                   L.rmsnorm(p["ssm_norm"], s, cfg.norm_eps))
+    h = x + fused
+    return (h + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h, cfg.norm_eps)),
+            ck, cv, conv, hs)
+
+
+# --- encdec (whisper) -------------------------------------------------------
+
+def init_encoder_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_layernorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_layernorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def encoder_block(p, cfg, x):
+    h = x + L.attention(p["attn"], cfg, L.layernorm(p["ln1"], x), None,
+                        causal=False)
+    return h + L.mlp(p["mlp"], L.layernorm(p["ln2"], h))
+
+
+def init_decoder_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_layernorm(cfg.d_model),
+        "self_attn": L.init_attention(ks[0], cfg),
+        "ln_x": L.init_layernorm(cfg.d_model),
+        "cross_attn": L.init_attention(ks[1], cfg),
+        "ln2": L.init_layernorm(cfg.d_model),
+        "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, gated=False),
+    }
+
+
+def decoder_block(p, cfg, x, enc, positions):
+    h = x + L.attention(p["self_attn"], cfg, L.layernorm(p["ln1"], x),
+                        positions, causal=True)
+    h = h + L.cross_attention(p["cross_attn"], cfg, L.layernorm(p["ln_x"], h),
+                              enc)
+    return h + L.mlp(p["mlp"], L.layernorm(p["ln2"], h))
+
+
+def decoder_block_decode(p, cfg, x, pos, ck, cv, cck, ccv):
+    """Single-token decoder step; cross-attn k/v precomputed in (cck, ccv)."""
+    a, ck, cv = L.attention_decode(p["self_attn"], cfg,
+                                   L.layernorm(p["ln1"], x), pos, ck, cv)
+    h = x + a
+    y = L.layernorm(p["ln_x"], h)
+    q, _, _ = L._project_qkv(p["cross_attn"], cfg, y, y, None, None)
+    Skv = cck.shape[1]
+    mask = jnp.ones((1, 1, 1, 1, Skv), bool)
+    o = L.attention_scores(cfg, q, cck.astype(x.dtype), ccv.astype(x.dtype),
+                           mask)
+    h = h + o @ p["cross_attn"]["wo"].astype(x.dtype)
+    return h + L.mlp(p["mlp"], L.layernorm(p["ln2"], h)), ck, cv
+
+
+# ===========================================================================
+# whole-model init
+# ===========================================================================
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init(cfg: ModelConfig, key):
+    if cfg.family == "cnn":
+        return init_resnet(cfg, key)
+    ks = jax.random.split(key, 6)
+    p: dict = {"embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        p["blocks"] = _stack_init(lambda k: init_dense_block(k, cfg), ks[1],
+                                  cfg.num_layers)
+        p["ln_f"] = L.init_rmsnorm(cfg.d_model)
+    elif cfg.family == "hybrid":
+        p["blocks"] = _stack_init(lambda k: init_hybrid_block(k, cfg), ks[1],
+                                  cfg.num_layers)
+        p["ln_f"] = L.init_rmsnorm(cfg.d_model)
+    elif cfg.family == "ssm":
+        blocks = []
+        lkeys = jax.random.split(ks[1], cfg.num_layers)
+        for i, bt in enumerate(cfg.block_pattern):
+            if bt == "m":
+                blocks.append({"m": XL.init_mlstm(lkeys[i], cfg)})
+            else:
+                blocks.append({"s": XL.init_slstm(lkeys[i], cfg)})
+            blocks[-1]["ln"] = L.init_rmsnorm(cfg.d_model)
+        p["blocks"] = blocks
+        p["ln_f"] = L.init_rmsnorm(cfg.d_model)
+    elif cfg.family == "encdec":
+        p["frontend_proj"] = L.dense_init(ks[2], (cfg.d_model, cfg.d_model))
+        p["enc_blocks"] = _stack_init(lambda k: init_encoder_block(k, cfg),
+                                      ks[1], cfg.encoder_layers)
+        p["enc_ln"] = L.init_layernorm(cfg.d_model)
+        p["dec_blocks"] = _stack_init(lambda k: init_decoder_block(k, cfg),
+                                      ks[3], cfg.num_layers)
+        p["ln_f"] = L.init_layernorm(cfg.d_model)
+    else:
+        raise ValueError(cfg.family)
+    if not cfg.tie_embeddings:
+        p["head"] = L.init_head(ks[4], cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def _logits(cfg, p, x):
+    if cfg.tie_embeddings:
+        return L.unembed(p["embed"], x)
+    return L.head(p["head"], x)
+
+
+def _scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan over stacked layers, or a python unroll when
+    ``cfg.unroll_layers`` (dry-run cost variants need exact per-layer HLO:
+    XLA cost analysis counts while-loop bodies once)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs, 0), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ===========================================================================
+# forward (training)
+# ===========================================================================
+
+def encode(cfg: ModelConfig, p, frames):
+    """Whisper encoder over stubbed frame embeddings [B,F,D]."""
+    dt = _dtype(cfg)
+    x = frames.astype(dt) @ p["frontend_proj"].astype(dt)
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(dt)
+
+    def body(h, lp):
+        return encoder_block(lp, cfg, h), None
+    body = _maybe_remat(cfg, body)
+    x, _ = _scan(cfg, body, x, p["enc_blocks"])
+    return L.layernorm(p["enc_ln"], x)
+
+
+def forward(cfg: ModelConfig, p, batch, ctx: Optional[ShardingCtx] = None):
+    """Training/eval forward.  Returns (logits [B,S,V], aux_loss)."""
+    if cfg.family == "cnn":
+        return forward_resnet(cfg, p, batch["images"]), 0.0
+    dt = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(p["embed"], tokens, dt)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            h, aux = carry
+            h2, a = dense_block(lp, cfg, _constrain(h, ctx), positions, ctx)
+            return (_constrain(h2, ctx), aux + a), None
+        body = _maybe_remat(cfg, body)
+        (x, aux), _ = _scan(cfg, body, (x, jnp.float32(0.0)), p["blocks"])
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "hybrid":
+        def body(carry, lp):
+            h, aux = carry
+            h2, a = hybrid_block(lp, cfg, _constrain(h, ctx), positions, ctx)
+            return (_constrain(h2, ctx), aux + a), None
+        body = _maybe_remat(cfg, body)
+        (x, aux), _ = _scan(cfg, body, (x, jnp.float32(0.0)), p["blocks"])
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "ssm":
+        aux = jnp.float32(0.0)
+        for bp in p["blocks"]:
+            y = L.rmsnorm(bp["ln"], x, cfg.norm_eps)
+            if "m" in bp:
+                y, _ = XL.mlstm_seq(bp["m"], cfg, y)
+            else:
+                y, _ = XL.slstm_seq(bp["s"], cfg, y)
+            x = x + y
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "encdec":
+        enc = encode(cfg, p, batch["frames"])
+        x = x + L.sinusoidal_positions(S, cfg.d_model).astype(dt)
+
+        def body(h, lp):
+            return decoder_block(lp, cfg, h, enc, positions), None
+        body = _maybe_remat(cfg, body)
+        x, _ = _scan(cfg, body, x, p["dec_blocks"])
+        x = L.layernorm(p["ln_f"], x)
+        aux = jnp.float32(0.0)
+    else:
+        raise ValueError(cfg.family)
+    return _logits(cfg, p, x), aux
+
+
+def loss_fn(cfg: ModelConfig, p, batch, ctx: Optional[ShardingCtx] = None):
+    """Cross-entropy LM loss (paper Eqn. 1/2).  Returns (loss, metrics)."""
+    if cfg.family == "cnn":
+        logits, _ = forward(cfg, p, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+        acc = (logits.argmax(-1) == labels).mean()
+        return nll, {"loss": nll, "acc": acc}
+    logits, aux = forward(cfg, p, batch, ctx)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    nll = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    loss = nll + aux
+    return loss, {"loss": loss, "nll": nll, "aux": aux}
+
+
+# ===========================================================================
+# KV-cache / state: init, prefill, decode
+# ===========================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or _dtype(cfg)
+    Lc, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    cache: dict = {}
+    if cfg.family in ("dense", "vlm", "moe", "hybrid", "encdec"):
+        # sliding-window archs only need a window-sized cache; we keep the
+        # full length for simplicity of position math unless window is set
+        # and smaller (documented memory optimization applies ring indexing).
+        cache["k"] = jnp.zeros((Lc, batch, max_len, KV, hd), dt)
+        cache["v"] = jnp.zeros((Lc, batch, max_len, KV, hd), dt)
+    if cfg.family == "hybrid":
+        di, st, ck = SSM.d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+        cache["conv"] = jnp.zeros((Lc, batch, ck - 1, di), dt)
+        cache["h"] = jnp.zeros((Lc, batch, di, st), jnp.float32)
+    if cfg.family == "encdec":
+        F = cfg.num_frontend_tokens
+        cache["ck"] = jnp.zeros((Lc, batch, F, KV, hd), dt)
+        cache["cv"] = jnp.zeros((Lc, batch, F, KV, hd), dt)
+    if cfg.family == "ssm":
+        states = []
+        for bt in cfg.block_pattern:
+            if bt == "m":
+                states.append({"m": XL.init_mlstm_state(cfg, batch)})
+            else:
+                states.append({"s": XL.init_slstm_state(cfg, batch)})
+        cache["xlstm"] = states
+    return cache
+
+
+def prefill(cfg: ModelConfig, p, batch, cache, ctx=None):
+    """Process the prompt, fill the cache, return last-position logits."""
+    dt = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(p["embed"], tokens, dt)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(h, xs):
+            lp, ck, cv = xs
+            h2, ck, cv = dense_block_prefill(lp, cfg, h, positions, ck, cv)
+            return h2, (_constrain_kv(ck, ctx), _constrain_kv(cv, ctx))
+        x, (ck, cv) = _scan(cfg, body, x, (p["blocks"], cache["k"],
+                                             cache["v"]))
+        cache = dict(cache, k=ck, v=cv)
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "hybrid":
+        def body(h, xs):
+            lp, ck, cv, conv, hs = xs
+            h2, ck, cv, conv, hs = hybrid_block_prefill(
+                lp, cfg, h, positions, ck, cv, conv, hs)
+            return h2, (_constrain_kv(ck, ctx), _constrain_kv(cv, ctx),
+                        conv, hs)
+        x, (ck, cv, conv, hs) = _scan(
+            cfg, body, x, (p["blocks"], cache["k"], cache["v"],
+                           cache["conv"], cache["h"]))
+        cache = dict(cache, k=ck, v=cv, conv=conv, h=hs)
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "ssm":
+        states = []
+        for bp, st0 in zip(p["blocks"], cache["xlstm"]):
+            y = L.rmsnorm(bp["ln"], x, cfg.norm_eps)
+            if "m" in bp:
+                y, st = XL.mlstm_seq(bp["m"], cfg, y)
+                states.append({"m": st})
+            else:
+                y, st = XL.slstm_seq(bp["s"], cfg, y)
+                states.append({"s": st})
+            x = x + y
+        cache = dict(cache, xlstm=states)
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "encdec":
+        enc = encode(cfg, p, batch["frames"])
+        x = x + L.sinusoidal_positions(S, cfg.d_model).astype(dt)
+
+        # precompute cross-attention k/v per decoder layer
+        def cross_kv(lp):
+            _, k, v = L._project_qkv(lp["cross_attn"], cfg, enc, enc, None,
+                                     None)
+            return k, v
+        cck, ccv = jax.vmap(cross_kv)(p["dec_blocks"])
+
+        def body(h, xs):
+            lp, ck, cv = xs
+            a, ck, cv = L.attention_prefill(
+                lp["self_attn"], cfg, L.layernorm(lp["ln1"], h), positions,
+                ck, cv, causal=True)
+            h = h + a
+            h = h + L.cross_attention(lp["cross_attn"], cfg,
+                                      L.layernorm(lp["ln_x"], h), enc)
+            h = h + L.mlp(lp["mlp"], L.layernorm(lp["ln2"], h))
+            return h, (_constrain_kv(ck, ctx), _constrain_kv(cv, ctx))
+        x, (ck, cv) = _scan(cfg, body, x, (p["dec_blocks"], cache["k"],
+                                             cache["v"]))
+        cache = dict(cache, k=ck, v=cv,
+                     ck=cck.astype(cache["ck"].dtype),
+                     cv=ccv.astype(cache["cv"].dtype))
+        x = L.layernorm(p["ln_f"], x)
+    else:
+        raise ValueError(cfg.family)
+    return _logits(cfg, p, x[:, -1:])[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, p, tokens, cache, pos, ctx=None):
+    """One decode step.  tokens [B,1]; pos: scalar int32 position of this
+    token (number of tokens already in the cache).  Returns (logits [B,V],
+    new cache)."""
+    dt = _dtype(cfg)
+    x = L.embed(p["embed"], tokens, dt)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(h, xs):
+            lp, ck, cv = xs
+            h2, ck, cv = dense_block_decode(lp, cfg, h, pos, ck, cv, ctx)
+            return h2, (ck, cv)
+        x, (ck, cv) = _scan(cfg, body, x, (p["blocks"], cache["k"],
+                                             cache["v"]))
+        cache = dict(cache, k=ck, v=cv)
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "hybrid":
+        def body(h, xs):
+            lp, ck, cv, conv, hs = xs
+            h2, ck, cv, conv, hs = hybrid_block_decode(lp, cfg, h, pos, ck,
+                                                       cv, conv, hs, ctx)
+            return h2, (ck, cv, conv, hs)
+        x, (ck, cv, conv, hs) = _scan(
+            cfg, body, x, (p["blocks"], cache["k"], cache["v"],
+                           cache["conv"], cache["h"]))
+        cache = dict(cache, k=ck, v=cv, conv=conv, h=hs)
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "ssm":
+        states = []
+        for bp, st0 in zip(p["blocks"], cache["xlstm"]):
+            y = L.rmsnorm(bp["ln"], x, cfg.norm_eps)
+            if "m" in bp:
+                y, st = XL.mlstm_seq(bp["m"], cfg, y, st0["m"])
+                states.append({"m": st})
+            else:
+                y, st = XL.slstm_seq(bp["s"], cfg, y, st0["s"])
+                states.append({"s": st})
+            x = x + y
+        cache = dict(cache, xlstm=states)
+        x = L.rmsnorm(p["ln_f"], x, cfg.norm_eps)
+    elif cfg.family == "encdec":
+        x = x + L.sinusoidal_positions(cache["k"].shape[2],
+                                       cfg.d_model).astype(dt)[pos][None, None]
+
+        def body(h, xs):
+            lp, ck, cv, cck, ccv = xs
+            h2, ck, cv = decoder_block_decode(lp, cfg, h, pos, ck, cv, cck,
+                                              ccv)
+            return h2, (ck, cv)
+        x, (ck, cv) = _scan(cfg, body, x, (p["dec_blocks"], cache["k"],
+                                             cache["v"], cache["ck"],
+                                             cache["cv"]))
+        cache = dict(cache, k=ck, v=cv)
+        x = L.layernorm(p["ln_f"], x)
+    else:
+        raise ValueError(cfg.family)
+    return _logits(cfg, p, x)[:, 0], cache

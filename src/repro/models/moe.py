@@ -1,0 +1,255 @@
+"""Mixture-of-Experts layer.
+
+Two interchangeable implementations:
+
+* ``moe_impl="dense"`` — every token through every expert, combined with the
+  top-k routing weights.  Exact (no capacity drops); used as the correctness
+  oracle and for CPU smoke tests where E <= 4.
+
+* ``moe_impl="ep_a2a"`` — production expert-parallel path under
+  ``shard_map``: tokens are sliced across the ``model`` mesh axis
+  (sequence-parallel dispatch), routed, exchanged with ``all_to_all`` to the
+  devices owning their experts, run through capacity-bucketed batched expert
+  FFNs, returned with a second ``all_to_all``, and re-assembled with an
+  ``all_gather``.  This is the textbook MoE EP communication pattern
+  (2x all-to-all + 1x all-gather) and is what the dry-run/roofline measures.
+  Capacity overflow drops tokens (GShard-style); tests use a high capacity
+  factor to validate bit-parity against the dense oracle.
+
+Shared experts (qwen2-moe) are ordinary always-on MLPs handled by the caller.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+try:  # jax >= 0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def init_moe(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    Ep = cfg.padded_experts   # stacks padded so they shard evenly (DESIGN.md)
+    return {
+        "router": dense_init(ks[0], (d, E)),
+        "w_gate": dense_init(ks[1], (Ep, d, ff), in_axis=1),
+        "w_up": dense_init(ks[2], (Ep, d, ff), in_axis=1),
+        "w_down": dense_init(ks[3], (Ep, ff, d), in_axis=1),
+    }
+
+
+def _route(cfg: ModelConfig, router_w, x2d):
+    """x2d [N, D] -> (gates [N,k], idx [N,k], probs [N,E], logits)."""
+    logits = (x2d.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs, logits
+
+
+def _aux_losses(cfg: ModelConfig, probs, idx, valid):
+    """GShard load-balance loss + router z-loss.  probs [N,E], idx [N,k],
+    valid [N] bool.  Returns (lb_sum, z_sum, count) — caller averages
+    (and psums under shard_map)."""
+    E = cfg.num_experts
+    v = valid.astype(jnp.float32)
+    n = v.sum()
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32) * v[:, None, None]
+    counts = onehot.sum(axis=(0, 1))                       # [E] dispatch counts
+    me_sum = (probs * v[:, None]).sum(axis=0)              # [E] router prob sums
+    return counts, me_sum, n
+
+
+def _finalize_aux(cfg: ModelConfig, counts, me_sum, n, logits_sq_sum):
+    E = cfg.num_experts
+    k = cfg.experts_per_token
+    f = counts / jnp.maximum(n * k, 1.0)          # dispatch fraction per expert
+    p = me_sum / jnp.maximum(n, 1.0)              # mean router prob per expert
+    lb = E * jnp.sum(f * p)
+    z = logits_sq_sum / jnp.maximum(n, 1.0)
+    return cfg.load_balance_loss * lb + cfg.router_z_loss * z, {
+        "moe_lb": lb, "moe_z": z}
+
+
+# ---------------------------------------------------------------------------
+# dense oracle
+# ---------------------------------------------------------------------------
+
+def moe_dense(p, cfg: ModelConfig, x):
+    """x [B,S,D] -> (out [B,S,D], aux_loss scalar, metrics)."""
+    B, S, D = x.shape
+    dt = x.dtype
+    xf = x.reshape(B * S, D)
+    gates, idx, probs, logits = _route(cfg, p["router"], xf)
+    E = cfg.num_experts
+    comb = (jax.nn.one_hot(idx, E, dtype=jnp.float32) *
+            gates[..., None]).sum(axis=1)                  # [N,E]
+    w_up, w_gate, w_down = (p["w_up"][:E], p["w_gate"][:E], p["w_down"][:E])
+    up = jnp.einsum("nd,edf->enf", xf, w_up.astype(dt))
+    gate = jax.nn.silu(jnp.einsum("nd,edf->enf", xf, w_gate.astype(dt)))
+    y = jnp.einsum("enf,efd->end", up * gate, w_down.astype(dt))
+    out = jnp.einsum("end,ne->nd", y.astype(jnp.float32), comb).astype(dt)
+    valid = jnp.ones((B * S,), bool)
+    counts, me_sum, n = _aux_losses(cfg, probs, idx, valid)
+    lsq = jnp.sum(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux, metrics = _finalize_aux(cfg, counts, me_sum, n, lsq)
+    return out.reshape(B, S, D), aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel all-to-all (production path)
+# ---------------------------------------------------------------------------
+
+def _pad_axis(a, mult, axis):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _ep_local(cfg: ModelConfig, model_axis: str, all_axes, E_pad: int,
+              cap_factor: float, x_l, router_w, wg, wu, wd):
+    """Per-device body under shard_map.  x_l [B_l,S,D] (local);
+    wg/wu/wd [E_l, D, F] (local expert shard of the padded stack)."""
+    B_l, S, D = x_l.shape
+    F = wu.shape[-1]
+    k = cfg.experts_per_token
+    dt = x_l.dtype
+    m = jax.lax.axis_size(model_axis)
+    E_l = E_pad // m
+    midx = jax.lax.axis_index(model_axis)
+
+    # ---- token slice over the model axis (sequence-parallel dispatch) ----
+    N = B_l * S
+    Nm = -(-N // m)                                   # ceil
+    xf = jnp.pad(x_l.reshape(N, D), ((0, Nm * m - N), (0, 0)))
+    xs = jax.lax.dynamic_slice_in_dim(xf, midx * Nm, Nm, axis=0)  # [Nm, D]
+    tok_global = midx * Nm + jnp.arange(Nm)
+    tvalid = tok_global < N
+
+    gates, idx, probs, logits = _route(cfg, router_w, xs)
+
+    # ---- build send buffers ----
+    C = max(int(math.ceil(Nm * k / m * cap_factor)), 1)
+    fe = idx.reshape(-1)                              # [Nm*k] global expert id
+    fg = (gates * tvalid[:, None].astype(gates.dtype)).reshape(-1)
+    ftok = jnp.repeat(jnp.arange(Nm), k)
+    dest = fe // E_l
+    le = fe - dest * E_l                              # local expert on dest
+    oh = jax.nn.one_hot(dest, m, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1, dest[:, None],
+                              axis=1)[:, 0]
+    keep = (pos < C) & (fg > 0)
+    spos = jnp.where(keep, pos, C)                    # OOB -> dropped scatter
+    send_x = jnp.zeros((m, C, D), dt).at[dest, spos].set(
+        xs[ftok] * keep[:, None].astype(dt), mode="drop")
+    meta = jnp.stack([le.astype(jnp.float32), fg.astype(jnp.float32),
+                      keep.astype(jnp.float32)], axis=-1)       # [Nm*k, 3]
+    send_m = jnp.zeros((m, C, 3), jnp.float32).at[dest, spos].set(
+        meta * keep[:, None].astype(jnp.float32), mode="drop")
+
+    # ---- exchange to expert owners ----
+    recv_x = jax.lax.all_to_all(send_x.reshape(m * C, D), model_axis,
+                                split_axis=0, concat_axis=0, tiled=True)
+    recv_m = jax.lax.all_to_all(send_m.reshape(m * C, 3), model_axis,
+                                split_axis=0, concat_axis=0, tiled=True)
+    T = m * C
+    rle = recv_m[:, 0].astype(jnp.int32)
+    rgate = recv_m[:, 1]
+    rvalid = recv_m[:, 2] > 0
+
+    # ---- bucket into [E_l, cap_e, D] and run batched expert FFN ----
+    cap_e = max(int(math.ceil(T / E_l * cap_factor)), 1)
+    ohe = jax.nn.one_hot(rle, E_l, dtype=jnp.int32) * rvalid[:, None]
+    pe = jnp.take_along_axis(jnp.cumsum(ohe, axis=0) - 1, rle[:, None],
+                             axis=1)[:, 0]
+    rkeep = rvalid & (pe < cap_e)
+    spe = jnp.where(rkeep, pe, cap_e)
+    bx = jnp.zeros((E_l, cap_e, D), dt).at[rle, spe].set(
+        recv_x * rkeep[:, None].astype(dt), mode="drop")
+    up = jnp.einsum("ecd,edf->ecf", bx, wu.astype(dt),
+                    preferred_element_type=jnp.float32)
+    gt = jnp.einsum("ecd,edf->ecf", bx, wg.astype(dt),
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(gt) * up).astype(dt)
+    y = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt),
+                   preferred_element_type=jnp.float32).astype(dt)
+
+    # ---- gather back out of buckets, weight by gate, return exchange ----
+    yt = y[rle, jnp.minimum(spe, cap_e - 1)] * rkeep[:, None].astype(dt)
+    yt = yt * rgate[:, None].astype(dt)
+    back = jax.lax.all_to_all(yt, model_axis, split_axis=0, concat_axis=0,
+                              tiled=True)                  # [m*C, D]
+    back = back.reshape(m, C, D)
+    contrib = back[dest, jnp.minimum(spos, C - 1)] * keep[:, None].astype(dt)
+    outs = jnp.zeros((Nm, D), dt).at[ftok].add(contrib)
+
+    # ---- reassemble full token set across the model axis ----
+    out_full = jax.lax.all_gather(outs, model_axis, axis=0, tiled=True)
+    out = out_full[:N].reshape(B_l, S, D)
+
+    # ---- aux losses (global means via psum over every mesh axis) ----
+    counts, me_sum, n = _aux_losses(cfg, probs, idx, tvalid)
+    lsq = jnp.sum(jnp.where(tvalid,
+                            jax.nn.logsumexp(logits, axis=-1) ** 2, 0.0))
+    counts = jax.lax.psum(counts, all_axes)
+    me_sum = jax.lax.psum(me_sum, all_axes)
+    n = jax.lax.psum(n, all_axes)
+    lsq = jax.lax.psum(lsq, all_axes)
+    dropped = jax.lax.psum(jnp.sum(fg > 0) - jnp.sum(keep), all_axes)
+    return out, counts, me_sum, n, lsq, dropped.astype(jnp.float32)
+
+
+def moe_ep_a2a(p, cfg: ModelConfig, x, mesh, batch_axes, model_axis,
+               cap_factor: Optional[float] = None):
+    """Expert-parallel MoE under shard_map.  x [B,S,D] sharded
+    P(batch_axes, None, None); expert stacks sharded P(model_axis,...)."""
+    m = mesh.shape[model_axis]
+    E_pad = -(-cfg.padded_experts // m) * m
+    cap = cap_factor if cap_factor is not None else cfg.capacity_factor
+    wg = _pad_axis(p["w_gate"], E_pad, 0)
+    wu = _pad_axis(p["w_up"], E_pad, 0)
+    wd = _pad_axis(p["w_down"], E_pad, 0)
+    # batch stays replicated over axes it cannot divide (e.g. decode B=1)
+    bsz = x.shape[0]
+    ok_axes: list = []
+    prod = 1
+    for a in batch_axes:
+        if bsz % (prod * mesh.shape[a]) == 0:
+            ok_axes.append(a)
+            prod *= mesh.shape[a]
+    batch_axes = tuple(ok_axes)
+    all_axes = tuple(batch_axes) + (model_axis,)
+    body = functools.partial(_ep_local, cfg, model_axis, all_axes, E_pad, cap)
+    xspec = P(tuple(batch_axes) if batch_axes else None, None, None)
+    espec = P(model_axis, None, None)
+    out, counts, me_sum, n, lsq, dropped = shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, P(None, None), espec, espec, espec),
+        out_specs=(xspec, P(None), P(None), P(), P(), P()),
+        check_vma=False,
+    )(x, p["router"], wg, wu, wd)
+    aux, metrics = _finalize_aux(cfg, counts, me_sum, n, lsq)
+    metrics["moe_dropped"] = dropped
+    return out, aux, metrics
+
+
+def moe_block(p, cfg: ModelConfig, x, ctx=None):
+    """Dispatch on cfg.moe_impl / presence of a sharding ctx."""
+    if cfg.moe_impl == "ep_a2a" and ctx is not None and ctx.mesh is not None:
+        return moe_ep_a2a(p, cfg, x, ctx.mesh, ctx.batch_axes, ctx.model_axis,
+                          cap_factor=ctx.moe_cap_factor)
+    return moe_dense(p, cfg, x)

@@ -1,0 +1,144 @@
+"""Mamba-style selective state-space layer (used standalone by hybrid
+blocks).  Training path uses a chunked associative scan (parallel within a
+chunk, sequential lax.scan across chunks) so peak memory is
+O(B * chunk * d_inner * state) instead of O(B * S * d_inner * state).
+Decode path carries (conv window, ssm state) — O(1) per token, which is what
+makes ``long_500k`` native for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(-(-cfg.d_model // 16), 1)
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.d_model * max(cfg.ssm_expand, 1)
+
+
+def init_mamba(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    d, di, st, ck = cfg.d_model, d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    r = dt_rank(cfg)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (ck, di)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, r + 2 * st)),
+        "dt_proj": dense_init(ks[3], (r, di)),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of U(1e-3, 1e-1)
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d)),
+    }
+
+
+def _causal_conv(u, w, b, carry=None):
+    """u [B,S,di]; w [ck,di] depthwise.  carry [B,ck-1,di] (decode) or None
+    (training, zero left-pad).  Returns (y [B,S,di], new_carry)."""
+    ck = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((u.shape[0], ck - 1, u.shape[2]), u.dtype)
+    full = jnp.concatenate([carry, u], axis=1)          # [B, ck-1+S, di]
+    y = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(ck):
+        y = y + full[:, i:i + u.shape[1]].astype(jnp.float32) * w[i]
+    y = y + b
+    new_carry = full[:, -(ck - 1):] if ck > 1 else carry
+    return y.astype(u.dtype), new_carry
+
+
+def _ssm_coeffs(p, cfg: ModelConfig, u):
+    """u [B,S,di] (post conv+silu) -> decay [B,S,di,st], inp [B,S,di,st],
+    C [B,S,st]."""
+    st = cfg.ssm_state
+    r = p["dt_proj"].shape[0]
+    xdbl = u.astype(jnp.float32) @ p["x_proj"]           # [B,S,r+2st]
+    dt_r, Bc, Cc = jnp.split(xdbl, [r, r + st], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])   # [B,S,di]
+    A = -jnp.exp(p["A_log"])                              # [di,st]
+    decay = jnp.exp(dt[..., None] * A)                    # [B,S,di,st]
+    inp = (dt[..., None] * Bc[:, :, None, :]) * u.astype(jnp.float32)[..., None]
+    return decay, inp, Cc
+
+
+def _chunk_scan(decay, inp, h0):
+    """Associative scan within a chunk.  decay/inp [B,L,di,st]; h0
+    [B,di,st].  h_t = decay_t * h_{t-1} + inp_t.  Returns (h_all [B,L,di,st],
+    h_last)."""
+    def combine(a, b):
+        (ad, ai), (bd, bi) = a, b
+        return ad * bd, bi + bd * ai
+    cd, ci = jax.lax.associative_scan(combine, (decay, inp), axis=1)
+    h_all = ci + cd * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_seq(p, cfg: ModelConfig, x, conv_carry=None, h0=None):
+    """Full-sequence mamba pass.  x [B,S,D].  Returns (y [B,S,D], state)
+    where state = (conv_carry, h) for decode continuation.
+
+    §Perf note: the selective-scan coefficients (decay/inp, [.., di, st]
+    fp32) are computed PER CHUNK inside the chunk loop, so peak live memory
+    is O(B*chunk*di*st) rather than O(B*S*di*st) — measured 2.4x lower HBM
+    bytes on hymba-1.5b train_4k (EXPERIMENTS.md §Perf iteration 3)."""
+    B, S, D = x.shape
+    di, st = d_inner(cfg), cfg.ssm_state
+    dt = x.dtype
+    uz = x @ p["in_proj"].astype(dt)
+    u, z = jnp.split(uz, 2, axis=-1)
+    u, conv_carry = _causal_conv(u, p["conv_w"], p["conv_b"], conv_carry)
+    u = jax.nn.silu(u)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, st), jnp.float32)
+    chunk = max(min(cfg.ssm_chunk, S), 1)
+    if S % chunk != 0:
+        chunk = S  # fallback: single chunk
+    nch = S // chunk
+    uch = u.reshape(B, nch, chunk, di).transpose(1, 0, 2, 3)
+
+    def step(h, uc):
+        decay, inp, Cc = _ssm_coeffs(p, cfg, uc)
+        h_all, h_last = _chunk_scan(decay, inp, h)
+        yc = jnp.einsum("bsdn,bsn->bsd", h_all, Cc) \
+            + p["D"] * uc.astype(jnp.float32)
+        return h_last, yc
+
+    if cfg.ssm_unroll_chunks:
+        ycs = []
+        h_last = h0
+        for c in range(nch):
+            h_last, yc = step(h_last, uch[c])
+            ycs.append(yc)
+        ys = jnp.stack(ycs, axis=0)
+    else:
+        h_last, ys = jax.lax.scan(step, h0, uch)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y.astype(dt) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt), (conv_carry, h_last)
+
+
+def mamba_decode(p, cfg: ModelConfig, x, state):
+    """Single-token decode.  x [B,1,D]; state = (conv_carry [B,ck-1,di],
+    h [B,di,st])."""
+    conv_carry, h = state
+    y, (new_conv, new_h) = mamba_seq(p, cfg, x, conv_carry, h)
+    return y, (new_conv, new_h)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    di, st, ck = d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    return (jnp.zeros((batch, ck - 1, di), dtype),
+            jnp.zeros((batch, di, st), jnp.float32))

@@ -1,0 +1,243 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with recurrent gate weights, inherently
+sequential).  Both use exponential gating with the max-stabilizer trick.
+
+Training runs the recurrences as ``lax.scan`` over the sequence (compact
+HLO; a chunkwise-parallel mLSTM is a recorded §Perf candidate).  Decode
+carries O(1) state per layer — xlstm runs ``long_500k`` natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 7)
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    dh = H * hd
+    return {
+        "wq": dense_init(ks[0], (d, dh)),
+        "wk": dense_init(ks[1], (d, dh)),
+        "wv": dense_init(ks[2], (d, dh)),
+        "wi": dense_init(ks[3], (d, H)),     # input gate (per head)
+        "wf": dense_init(ks[4], (d, H)),     # forget gate (per head)
+        "wz": dense_init(ks[5], (d, dh)),    # output gating branch
+        "wo": dense_init(ks[6], (dh, d)),
+        "out_norm": init_rmsnorm(hd),
+    }
+
+
+def _mlstm_cell(carry, xs):
+    """carry: (C [B,H,hd,hd], n [B,H,hd], m [B,H]); xs per-step tensors."""
+    C, n, m = carry
+    q, k, v, li, lf = xs            # q/k/v [B,H,hd]; li/lf [B,H]
+    m_new = jnp.maximum(lf + m, li)
+    i = jnp.exp(li - m_new)[..., None]                     # [B,H,1]
+    f = jnp.exp(lf + m - m_new)[..., None]
+    C = f[..., None] * C + i[..., None] * (v[..., :, None] * k[..., None, :])
+    n = f * n + i * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)                # [B,H,hd]
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return (C, n, m_new), h
+
+
+def _mlstm_project(p, cfg: ModelConfig, x):
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    dt = x.dtype
+    scale = hd ** -0.5
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd).astype(jnp.float32) * scale
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, H, hd).astype(jnp.float32) * scale
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, H, hd).astype(jnp.float32)
+    li = (x.astype(jnp.float32) @ p["wi"])                 # [B,S,H] log input gate
+    lf = jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["wf"])
+    return q, k, v, li, lf
+
+
+def _mlstm_finish(p, cfg: ModelConfig, x, h):
+    B, S = x.shape[0], x.shape[1]
+    H, hd = cfg.num_heads, cfg.head_dim
+    dt = x.dtype
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    z = jax.nn.silu(x @ p["wz"].astype(dt))
+    y = (h.reshape(B, S, H * hd).astype(dt) * z)
+    return y @ p["wo"].astype(dt)
+
+
+def mlstm_seq(p, cfg: ModelConfig, x, state=None):
+    """x [B,S,D] -> (y [B,S,D], state).  Dispatches on cfg.mlstm_impl:
+    "scan" = sequential cell (oracle); "chunked" = exact chunkwise-parallel
+    form (§Perf: within-chunk work becomes MXU matmuls; the sequential
+    dependency shrinks from S steps to S/chunk steps)."""
+    if cfg.mlstm_impl == "chunked" and x.shape[1] > 1:
+        return mlstm_seq_chunked(p, cfg, x, state)
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q, k, v, li, lf = _mlstm_project(p, cfg, x)
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (q, k, v)) + tuple(
+        a.transpose(1, 0, 2) for a in (li, lf))
+    state, hs = jax.lax.scan(_mlstm_cell, state, xs)
+    h = hs.transpose(1, 0, 2, 3)                           # [B,S,H,hd]
+    return _mlstm_finish(p, cfg, x, h), state
+
+
+def mlstm_seq_chunked(p, cfg: ModelConfig, x, state=None):
+    """Exact chunkwise-parallel mLSTM.
+
+    Stabilizer-invariance: the cell output h_t = num/max(|n.q|, exp(-m_t))
+    is invariant to the choice of stabilizer in exact arithmetic (both
+    numerator and denominator carry the same exp(-m) factor and the clamp
+    compares like-scaled quantities), so a per-chunk max M_c replaces the
+    per-step running max and the whole chunk evaluates as masked matmuls:
+
+      A_t   = cumsum(log f)                 (within chunk)
+      M_c   = max(m_carry, max_j(li_j - A_j))
+      w_j   = exp(li_j - A_j - M_c)
+      num_t = sum_{j<=t} w_j (q_t.k_j) v_j + exp(m_carry - M_c) C q_t
+      n_t   = sum_{j<=t} w_j k_j           + exp(m_carry - M_c) n
+      h_t   = num_t / max(|n_t.q_t|, exp(-(A_t + M_c)))
+
+    Carries update with the full-chunk sums; m_carry' = A_L + M_c.
+    Equality with the sequential cell is unit-tested to fp tolerance.
+    """
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q, k, v, li, lf = _mlstm_project(p, cfg, x)
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    Lc = max(min(cfg.mlstm_chunk, S), 1)
+    if S % Lc != 0:
+        Lc = S
+    nch = S // Lc
+
+    def chunk(carry, xs):
+        C, n, m = carry                      # [B,H,hd,hd], [B,H,hd], [B,H]
+        qc, kc, vc, lic, lfc = xs            # [B,L,H,*]
+        A = jnp.cumsum(lfc, axis=1)                          # [B,L,H]
+        M_c = jnp.maximum(m, (lic - A).max(axis=1))          # [B,H]
+        w = jnp.exp(lic - A - M_c[:, None])                  # [B,L,H]
+        carry_scale = jnp.exp(m - M_c)                       # [B,H]
+
+        scores = jnp.einsum("blhd,bjhd->bhlj", qc, kc)
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        scores = scores * w.transpose(0, 2, 1)[:, :, None, :]   # w_j on J
+        scores = jnp.where(tri[None, None], scores, 0.0)
+        num = jnp.einsum("bhlj,bjhd->blhd", scores, vc)
+        # C is [B,H,v-dim,k-dim]; q contracts the k-dim (matches the cell's
+        # einsum("bhij,bhj->bhi", C, q))
+        num = num + carry_scale[:, None, :, None] * jnp.einsum(
+            "blhe,bhde->blhd", qc, C)
+
+        wk = w[..., None] * kc                               # [B,L,H,hd]
+        n_cum = jnp.cumsum(wk, axis=1) + (carry_scale[:, None, :, None] *
+                                          n[:, None])
+        den = jnp.abs(jnp.einsum("blhd,blhd->blh", qc, n_cum))
+        den = jnp.maximum(den, jnp.exp(-(A + M_c[:, None])))
+        h = num / den[..., None]
+
+        C_new = jnp.einsum("bjhd,bjhe->bhde", w[..., None] * vc, kc) \
+            + carry_scale[..., None, None] * C
+        n_new = wk.sum(axis=1) + carry_scale[..., None] * n
+        m_new = A[:, -1] + M_c
+        return (C_new, n_new, m_new), h
+
+    xs = tuple(a.reshape(B, nch, Lc, H, -1).transpose(1, 0, 2, 3, 4)
+               for a in (q, k, v)) + tuple(
+        a.reshape(B, nch, Lc, H).transpose(1, 0, 2, 3) for a in (li, lf))
+    if cfg.ssm_unroll_chunks:
+        hs_list = []
+        carry = state
+        for c in range(nch):
+            carry, hc = chunk(carry, jax.tree.map(lambda a: a[c], xs))
+            hs_list.append(hc)
+        state = carry
+        h = jnp.concatenate(hs_list, axis=1)
+    else:
+        state, hs = jax.lax.scan(chunk, state, xs)
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return _mlstm_finish(p, cfg, x, h), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 10)
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H                       # sLSTM operates at model width
+    p = {"r_" + g: dense_init(ks[i], (H, hd, hd), in_axis=1)
+         for i, g in enumerate(("i", "f", "z", "o"))}
+    for j, g in enumerate(("i", "f", "z", "o")):
+        p["w_" + g] = dense_init(ks[4 + j], (d, d))
+        p["b_" + g] = jnp.zeros((d,), jnp.float32)
+    p["w_out"] = dense_init(ks[8], (d, d))
+    p["out_norm"] = init_rmsnorm(d)
+    return p
+
+
+def _slstm_cell(p, H, carry, xw):
+    """carry: (c, n, h, m) each [B,d] fp32; xw: the four W x_t + b [B,d]."""
+    c, n, h, m = carry
+    xi, xf, xz, xo = xw
+    B, d = h.shape
+    hd = d // H
+    hh = h.reshape(B, H, hd)
+    def rec(w):   # [H, hd, hd] blockwise recurrent matmul
+        return jnp.einsum("bhi,hij->bhj", hh, w).reshape(B, d)
+    li = xi + rec(p["r_i"])
+    lf = jax.nn.log_sigmoid(xf + rec(p["r_f"]))
+    z = jnp.tanh(xz + rec(p["r_z"]))
+    o = jax.nn.sigmoid(xo + rec(p["r_o"]))
+    m_new = jnp.maximum(lf + m, li)
+    i = jnp.exp(li - m_new)
+    f = jnp.exp(lf + m - m_new)
+    c = f * c + i * z
+    n = f * n + i
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_seq(p, cfg: ModelConfig, x, state=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    xf32 = x.astype(jnp.float32)
+    xw = tuple(xf32 @ p["w_" + g] + p["b_" + g] for g in ("i", "f", "z", "o"))
+    if state is None:
+        state = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(3)) + (
+            jnp.full((B, D), -1e30, jnp.float32),)
+    xs = tuple(a.transpose(1, 0, 2) for a in xw)
+    cell = lambda carry, step_x: _slstm_cell(p, H, carry, step_x)
+    state, hs = jax.lax.scan(cell, state, xs)
+    h = hs.transpose(1, 0, 2)                              # [B,S,D]
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    return (h.astype(x.dtype)) @ p["w_out"].astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# states
+# ---------------------------------------------------------------------------
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.num_heads, cfg.head_dim
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return tuple(jnp.zeros((batch, d), jnp.float32) for _ in range(3)) + (
+        jnp.full((batch, d), -1e30, jnp.float32),)

@@ -1,0 +1,106 @@
+"""Minimal optimizer library (optax-free): each optimizer is an
+``(init_fn, update_fn)`` pair over parameter pytrees.
+
+update_fn(grads, state, params, lr) -> (new_params, new_state)
+
+``dc_ssgd`` (appendix H) consumes *stacked microbatch gradients* instead of
+a single averaged gradient — the train step feeds it accordingly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dc_ssgd import dc_ssgd_apply
+from repro.utils.tree import tree_zeros_like
+
+Pytree = Any
+Optimizer = Tuple[Callable, Callable]
+
+
+def _cast_like(new, old):
+    return jax.tree.map(lambda n, o: n.astype(o.dtype), new, old)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr, **_):
+        new = jax.tree.map(
+            lambda w, g: w.astype(jnp.float32) - lr * g.astype(jnp.float32),
+            params, grads)
+        return _cast_like(new, params), state
+    return init, update
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"mu": tree_zeros_like(
+            jax.tree.map(lambda x: x.astype(jnp.float32), params))}
+
+    def update(grads, state, params, lr, **_):
+        mu = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        step = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), mu, grads) \
+            if nesterov else mu
+        new = jax.tree.map(
+            lambda w, s: w.astype(jnp.float32) - lr * s, params, step)
+        return _cast_like(new, params), {"mu": mu}
+    return init, update
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        f32 = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+        return {"m": tree_zeros_like(f32), "v": tree_zeros_like(f32),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr, **_):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda a, g: b2 * a + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def leaf(w, ml, vl):
+            upd = (ml / bc1) / (jnp.sqrt(vl / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * w.astype(jnp.float32)
+            return w.astype(jnp.float32) - lr * upd
+        new = jax.tree.map(leaf, params, m, v)
+        return _cast_like(new, params), {"m": m, "v": v, "t": t}
+    return init, update
+
+
+def dc_ssgd(lam: float = 0.04) -> Optimizer:
+    """Appendix-H delay-compensated large-batch SGD.  ``grads`` must carry a
+    leading microbatch axis [M, ...]."""
+    def init(params):
+        return ()
+
+    def update(grads_stacked, state, params, lr, **_):
+        return dc_ssgd_apply(params, grads_stacked, eta=lr, lam=lam), state
+    return init, update
+
+
+def get_optimizer(name: str, run=None) -> Optimizer:
+    if name == "sgd":
+        return sgd()
+    if name == "momentum":
+        return momentum(beta=getattr(run, "momentum", 0.9) or 0.9)
+    if name == "adam":
+        return adam(weight_decay=getattr(run, "weight_decay", 0.0))
+    if name == "dc_ssgd":
+        return dc_ssgd(lam=getattr(run, "lambda0", 0.04))
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+STACKED_GRAD_OPTIMIZERS = ("dc_ssgd",)

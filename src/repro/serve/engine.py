@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode with a KV cache.
+
+``ServeEngine`` drives continuous generation for a batch of requests on the
+compiled ``prefill`` / ``decode_step`` functions (greedy or temperature
+sampling).  The same two functions are what ``launch/dryrun.py`` lowers for
+the ``prefill_32k`` / ``decode_32k`` / ``long_500k`` shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0      # 0 => greedy
+    generated: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+                 ctx=None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.ctx = ctx
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b, c: prefill(cfg, p, b, c, ctx))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(cfg, p, t, c, pos, ctx))
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Batched greedy/sampled generation.  All prompts padded to the
+        longest; generation runs to the max requested new tokens."""
+        cfg = self.cfg
+        B = len(requests)
+        S = max(len(r.prompt) for r in requests)
+        tokens = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            tokens[i, S - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(tokens)}
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (B, cfg.num_frontend_tokens, cfg.d_model), jnp.float32)
+        cache = init_cache(cfg, B, self.max_len)
+        logits, cache = self._prefill(self.params, batch, cache)
+        n_new = max(r.max_new_tokens for r in requests)
+        outs = np.zeros((B, n_new), np.int32)
+        tok = self._sample(logits, requests[0].temperature)[:, None]
+        for j in range(n_new):
+            outs[:, j] = np.asarray(tok[:, 0])
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(S + j))
+            tok = self._sample(logits, requests[0].temperature)[:, None]
+        for i, r in enumerate(requests):
+            r.generated = outs[i, :r.max_new_tokens].tolist()
+        return requests

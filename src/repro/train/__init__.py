@@ -1,0 +1,6 @@
+from repro.train.train_step import (build_dc_round_step, build_train_step,
+                                    init_dc_round_state)
+from repro.train.trainer import AsyncTrainer, Trainer, lr_schedule
+
+__all__ = ["AsyncTrainer", "Trainer", "build_dc_round_step",
+           "build_train_step", "init_dc_round_state", "lr_schedule"]

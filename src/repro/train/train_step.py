@@ -1,0 +1,165 @@
+"""Training steps.
+
+* ``build_train_step`` — synchronous data/tensor-parallel step (the SSGD /
+  sequential-SGD baseline, or appendix-H ``dc_ssgd`` via stacked microbatch
+  gradients).  Microbatching is a ``lax.scan`` accumulating fp32 grads.
+
+* ``build_dc_round_step`` — the paper's technique on the multi-pod mesh:
+  each pod is one DC-ASGD worker.  Per-pod parameter snapshots are stacked
+  on a leading axis sharded over "pod"; every pod computes the gradient of
+  its own snapshot on its own batch shard (one SPMD forward/backward), then
+  the pods' gradients are applied to the server weights *sequentially* with
+  delay compensation (scan over pods) — a bulk-synchronous emulation of one
+  round-robin DC-ASGD round (each pod's push sees the drift of the pods
+  that pushed before it, i.e. tau = pod_index within the round, matching
+  the simulator's round-robin semantics).  Finally all pods pull the fresh
+  server weights.  Communication: per-pod gradient broadcast (the "push")
+  + snapshot broadcast (the "pull") — exactly the PS traffic of the paper,
+  expressed as collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.kernels import ops as kops
+from repro.models import loss_fn
+from repro.models.model import ShardingCtx
+from repro.optim.optimizers import STACKED_GRAD_OPTIMIZERS, get_optimizer
+from repro.utils.tree import global_norm_clip, tree_add, tree_scale, tree_zeros_like
+
+
+def _split_microbatches(batch, n):
+    def leaf(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(leaf, batch)
+
+
+def _grads_microbatched(cfg, params, batch, n_micro, ctx):
+    """Returns (grads_mean or grads_stacked, metrics)."""
+    def gfn(p, b):
+        (l, metrics), g = jax.value_and_grad(
+            lambda pp: loss_fn(cfg, pp, b, ctx), has_aux=True)(p)
+        return g, metrics
+
+    if n_micro <= 1:
+        return gfn(params, batch)
+    mb = _split_microbatches(batch, n_micro)
+
+    def body(acc, b):
+        g, metrics = gfn(params, b)
+        acc = tree_add(acc, jax.tree.map(lambda x: x.astype(jnp.float32), g))
+        return acc, metrics
+    g0 = tree_zeros_like(jax.tree.map(lambda x: x.astype(jnp.float32),
+                                      params))
+    gsum, ms = jax.lax.scan(body, g0, mb)
+    metrics = jax.tree.map(lambda x: x.mean(0), ms)
+    return tree_scale(gsum, 1.0 / n_micro), metrics
+
+
+def _grads_stacked(cfg, params, batch, n_micro, ctx):
+    mb = _split_microbatches(batch, max(n_micro, 1))
+
+    def body(_, b):
+        (l, metrics), g = jax.value_and_grad(
+            lambda pp: loss_fn(cfg, pp, b, ctx), has_aux=True)(params)
+        return None, (g, metrics)
+    _, (gs, ms) = jax.lax.scan(body, None, mb)
+    return gs, jax.tree.map(lambda x: x.mean(0), ms)
+
+
+def build_train_step(cfg: ModelConfig, run: RunConfig,
+                     ctx: Optional[ShardingCtx] = None):
+    """Returns step(params, opt_state, batch, lr) -> (params, opt_state,
+    metrics).  Not jitted — callers jit with their shardings."""
+    init_opt, update = get_optimizer(
+        run.optimizer if run.optimizer in
+        ("sgd", "momentum", "adam", "dc_ssgd") else "sgd", run)
+    stacked = run.optimizer in STACKED_GRAD_OPTIMIZERS
+
+    def step(params, opt_state, batch, lr):
+        if stacked:
+            g, metrics = _grads_stacked(cfg, params, batch,
+                                        max(run.microbatches, 2), ctx)
+        else:
+            g, metrics = _grads_microbatched(cfg, params, batch,
+                                             run.microbatches, ctx)
+            if run.grad_clip:
+                g = global_norm_clip(g, run.grad_clip)
+        params, opt_state = update(g, opt_state, params, lr)
+        return params, opt_state, metrics
+
+    return init_opt, step
+
+
+# ---------------------------------------------------------------------------
+# the paper's technique, multi-pod
+# ---------------------------------------------------------------------------
+
+def build_dc_round_step(cfg: ModelConfig, run: RunConfig, n_pods: int,
+                        ctx: Optional[ShardingCtx] = None):
+    """One DC-ASGD round over the pods (see module docstring).
+
+    State:
+      w        — server weights (replicated over "pod", sharded data/model).
+      w_stack  — per-pod snapshots [n_pods, ...] sharded P("pod", ...).
+      ms       — MeanSquare EMA (DC-ASGD-a, Eqn. 14).
+    Batch carries a leading [n_pods] axis sharded over "pod".
+
+    step(w, w_stack, ms, batch, lr) -> (w', w_stack', ms', metrics)
+    """
+    adaptive = run.optimizer != "dc_asgd_c"
+    lam0 = run.lambda0 if run.optimizer != "asgd" else 0.0
+    snap_dt = jnp.dtype(run.snapshot_dtype)
+
+    def step(w, w_stack, ms, batch, lr):
+        # --- each pod computes grads of ITS snapshot on ITS batch shard ---
+        def pod_loss(ws):
+            def one(wp, bp):
+                l, metrics = loss_fn(cfg, wp, bp, ctx)
+                return l, metrics
+            losses, metrics = jax.vmap(one)(ws, batch)
+            return losses.sum(), metrics
+        (_, metrics), g_stack = jax.value_and_grad(pod_loss, has_aux=True)(
+            w_stack)
+
+        # --- sequential compensated pushes (the async round) --------------
+        # unrolled python loop (n_pods is tiny); keeps HLO cost analysis
+        # exact (while-loop bodies are counted once by XLA)
+        w_new, ms_new = w, ms
+        for i in range(n_pods):
+            g_m = jax.tree.map(lambda x: x[i], g_stack)
+            w_bak_m = jax.tree.map(lambda x: x[i], w_stack)
+            w_new, ms_new = kops.dc_update_tree(
+                w_new, w_bak_m, g_m, ms_new, eta=lr, lam0=lam0,
+                m=run.dc_m, eps=run.dc_eps, adaptive=adaptive)
+
+        # --- all pods pull the fresh server weights ------------------------
+        w_stack_new = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x.astype(snap_dt)[None], (n_pods,) + x.shape),
+            w_new)
+        metrics = jax.tree.map(lambda x: x.mean(0), metrics)
+        return w_new, w_stack_new, ms_new, metrics
+
+    return step
+
+
+def init_dc_round_state(params, n_pods: int,
+                        snapshot_dtype=jnp.bfloat16):
+    """Per-pod snapshots are stored in bf16 (§Perf): w_bak only feeds the
+    drift term (w - w_bak), whose magnitude is set by eta*g sums, so bf16
+    resolution is ample; halves snapshot HBM + pull traffic."""
+    w_stack = jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            x.astype(snapshot_dtype)[None], (n_pods,) + x.shape).copy(),
+        params)
+    ms = tree_zeros_like(jax.tree.map(lambda x: x.astype(jnp.float32),
+                                      params))
+    return w_stack, ms

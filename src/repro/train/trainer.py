@@ -1,0 +1,120 @@
+"""Training loop driver: metrics, LR schedule, checkpoints.
+
+Two modes:
+  * ``Trainer``       — synchronous loop over ``build_train_step`` (used by
+                        examples and the end-to-end driver).
+  * ``AsyncTrainer``  — DC-ASGD loop over the simulator (per-worker event
+                        stream), i.e. the paper's algorithm end-to-end on a
+                        real model + data pipeline.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.async_sim import SimConfig, run_sim
+from repro.models import init as model_init
+from repro.models import loss_fn
+from repro.train.train_step import build_train_step
+
+
+def lr_schedule(run: RunConfig) -> Callable[[int], float]:
+    """Step-decay schedule as in the paper (x0.1 at 1/2 and 3/4 of
+    training), He et al. practice."""
+    def lr(t: int) -> float:
+        frac = t / max(run.steps, 1)
+        scale = 1.0
+        if frac >= 0.5:
+            scale *= 0.1
+        if frac >= 0.75:
+            scale *= 0.1
+        return run.learning_rate * scale
+    return lr
+
+
+@dataclass
+class TrainLog:
+    steps: List[int] = field(default_factory=list)
+    losses: List[float] = field(default_factory=list)
+    times: List[float] = field(default_factory=list)
+    extra: dict = field(default_factory=dict)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, run: RunConfig, ctx=None):
+        self.cfg, self.run, self.ctx = cfg, run, ctx
+        init_opt, step = build_train_step(cfg, run, ctx)
+        self._init_opt = init_opt
+        self._step = jax.jit(step)
+        self.log = TrainLog()
+
+    def init_state(self, seed: Optional[int] = None):
+        params = model_init(self.cfg, jax.random.PRNGKey(
+            self.run.seed if seed is None else seed))
+        return params, self._init_opt(params)
+
+    def fit(self, batch_iter, params=None, opt_state=None):
+        run = self.run
+        if params is None:
+            params, opt_state = self.init_state()
+        sched = lr_schedule(run)
+        t0 = time.perf_counter()
+        for t in range(run.steps):
+            batch = next(batch_iter)
+            params, opt_state, metrics = self._step(
+                params, opt_state, batch, jnp.float32(sched(t)))
+            if t % max(run.log_every, 1) == 0 or t == run.steps - 1:
+                loss = float(metrics["loss"])
+                self.log.steps.append(t)
+                self.log.losses.append(loss)
+                self.log.times.append(time.perf_counter() - t0)
+            if (run.checkpoint_dir and run.checkpoint_every and
+                    t and t % run.checkpoint_every == 0):
+                save_checkpoint(run.checkpoint_dir,
+                                {"params": params, "step": jnp.int32(t)})
+        if run.checkpoint_dir:
+            save_checkpoint(run.checkpoint_dir,
+                            {"params": params, "step": jnp.int32(run.steps)})
+        return params, opt_state
+
+    def evaluate(self, params, batches) -> float:
+        total, n = 0.0, 0
+        efn = jax.jit(lambda p, b: loss_fn(self.cfg, p, b, self.ctx)[0])
+        for b in batches:
+            total += float(efn(params, b))
+            n += 1
+        return total / max(n, 1)
+
+
+class AsyncTrainer:
+    """DC-ASGD (paper Algorithms 1+2) on a real model via the simulator."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, ctx=None):
+        self.cfg, self.run, self.ctx = cfg, run, ctx
+
+    def fit(self, batch_iter, params=None):
+        cfg, run = self.cfg, self.run
+        if params is None:
+            params = model_init(cfg, jax.random.PRNGKey(run.seed))
+
+        def grad_fn(p, b):
+            (l, _), g = jax.value_and_grad(
+                lambda pp: loss_fn(cfg, pp, b, self.ctx), has_aux=True)(p)
+            return g, l
+
+        algo = {"asgd": "asgd", "ssgd": "ssgd", "sgd": "seq_sgd",
+                "dc_asgd_c": "dc_asgd_c", "dc_asgd_a": "dc_asgd_a"}.get(
+                    run.optimizer, "dc_asgd_a")
+        sim = SimConfig(
+            algo=algo, num_workers=run.num_workers, lr=run.learning_rate,
+            lambda0=run.lambda0, dc_m=run.dc_m, dc_eps=run.dc_eps,
+            schedule=run.delay_schedule, seed=run.seed,
+            lr_schedule=lr_schedule(run))
+        result = run_sim(sim, params, grad_fn, batch_iter, steps=run.steps)
+        return result.final_state.w, result

@@ -1,0 +1,110 @@
+"""HLO text analysis: extract collective-communication bytes from lowered
+or compiled modules.  Used by the dry-run / roofline pipeline (§Roofline):
+``collective_bytes`` is *not* in ``compiled.cost_analysis()`` so we parse the
+module text and sum the bytes each collective moves over the interconnect.
+
+Byte accounting per op (ring algorithms, n = participants per group):
+  all-reduce       2*(n-1)/n * size      (reduce-scatter + all-gather)
+  all-gather       (n-1)/n   * size(out)
+  reduce-scatter   (n-1)/n   * size(in)  == (n-1) * size(out)
+  all-to-all       (n-1)/n   * size
+  collective-permute  1.0    * size
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# e.g.  %all-gather.1 = bf16[16,512]{1,0} all-gather(...), replica_groups=...
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"all-reduce-start|all-gather-start|collective-permute-start)\b(.*)$")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    bytes_by_kind: dict = field(default_factory=dict)
+    total_bytes: float = 0.0
+    # raw tensor bytes (sum of collective output sizes, no ring factor)
+    raw_bytes: float = 0.0
+
+    def as_dict(self):
+        return {
+            "counts": dict(self.counts),
+            "bytes_by_kind": {k: float(v) for k, v in self.bytes_by_kind.items()},
+            "total_bytes": float(self.total_bytes),
+            "raw_bytes": float(self.raw_bytes),
+        }
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of a shape string like ``bf16[8,128]{1,0}`` or a tuple
+    shape ``(f32[4,4], f32[4,4])``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(rest)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        del n_groups
+        return max(group_size, 1)
+    m = _EXPLICIT_GROUPS_RE.search(rest)
+    if m:
+        return max(len([t for t in m.group(1).split(",") if t.strip() != ""]), 1)
+    return default
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind.startswith("all-reduce"):
+        return 2.0 * (n - 1) / n
+    if kind.startswith("collective-permute"):
+        return 1.0
+    # all-gather / reduce-scatter / all-to-all
+    return (n - 1) / n
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind, rest = m.group(1), m.group(2), m.group(3)
+        kind = kind.replace("-start", "")
+        size = _shape_bytes(shape_text)
+        n = _group_size(rest, default_group)
+        moved = size * _ring_factor(kind, n)
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + moved
+        stats.total_bytes += moved
+        stats.raw_bytes += size
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,80 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_zeros_like(tree: Pytree, dtype=None) -> Pytree:
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=dtype or x.dtype), tree)
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return functools.reduce(jnp.add, jax.tree.leaves(leaves))
+
+
+def tree_sq_norm(tree: Pytree):
+    return tree_dot(tree, tree)
+
+
+def tree_norm(tree: Pytree):
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def global_norm_clip(tree: Pytree, max_norm: float) -> Pytree:
+    norm = tree_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return tree_scale(tree, scale)
+
+
+def param_count(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_allclose(a: Pytree, b: Pytree, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree.map(
+        lambda x, y: np.allclose(np.asarray(x, np.float64), np.asarray(y, np.float64), rtol=rtol, atol=atol),
+        a, b)
+    return all(jax.tree.leaves(oks))
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: Pytree) -> Pytree:
+    """Map ``fn(name, leaf)`` where name is a '/'-joined key path."""
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_name(p), x), tree)

@@ -1,0 +1,33 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a subprocess with N host platform devices.
+
+    Multi-device tests must run out-of-process: jax locks the device count
+    at first init, and the main pytest process keeps the real (1-device)
+    topology.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

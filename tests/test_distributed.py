@@ -1,0 +1,208 @@
+"""Multi-device tests (subprocess with forced host devices): MoE EP parity,
+sharded train step, DC pod-round vs explicit PS semantics, dry-run smoke."""
+import numpy as np
+import pytest
+
+
+def test_moe_ep_a2a_matches_dense(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models.moe import moe_dense, moe_ep_a2a, init_moe
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+for arch, pad in [('qwen3-moe-30b-a3b', 0), ('qwen2-moe-a2.7b', 8)]:
+    cfg = get_config(arch).reduced(max_experts=6 if pad else 8)
+    cfg = cfg.with_(expert_pad=pad, capacity_factor=8.0, moe_impl='ep_a2a')
+    key = jax.random.PRNGKey(1)
+    p = init_moe(key, cfg)
+    x = jax.random.normal(key, (4, 16, cfg.d_model), jnp.float32)
+    out_d, aux_d, _ = moe_dense(p, cfg, x)
+    with mesh:
+        out_e, aux_e, met = jax.jit(lambda p, x: moe_ep_a2a(
+            p, cfg, x, mesh, ('data',), 'model', cap_factor=8.0))(p, x)
+    assert np.abs(np.asarray(out_d)-np.asarray(out_e)).max() < 1e-5, arch
+    assert abs(float(aux_d)-float(aux_e)) < 1e-5, arch
+    assert float(met['moe_dropped']) == 0.0, arch
+print('PARITY OK')
+""", n_devices=8)
+    assert "PARITY OK" in out
+
+
+def test_moe_ep_a2a_small_batch_decode(subproc):
+    """decode-style tiny token counts (B*S < mesh size) still route."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config
+from repro.models.moe import moe_dense, moe_ep_a2a, init_moe
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = get_config('qwen3-moe-30b-a3b').reduced(max_experts=8).with_(
+    capacity_factor=8.0)
+p = init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, cfg.d_model))
+out_d, _, _ = moe_dense(p, cfg, x)
+with mesh:
+    out_e, _, met = jax.jit(lambda p, x: moe_ep_a2a(
+        p, cfg, x, mesh, ('data',), 'model', cap_factor=8.0))(p, x)
+assert np.abs(np.asarray(out_d)-np.asarray(out_e)).max() < 1e-5
+print('DECODE OK')
+""", n_devices=8)
+    assert "DECODE OK" in out
+
+
+def test_moe_capacity_drops_when_low():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models.moe import init_moe, moe_dense
+    # dense oracle never drops; ep_a2a drop accounting is covered in the
+    # multi-device test; here assert the aux metrics stay finite at cf->0
+    cfg = get_config("qwen3-moe-30b-a3b").reduced(max_experts=4)
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    out, aux, met = moe_dense(p, cfg, x)
+    assert np.isfinite(float(aux))
+
+
+def test_sharded_train_step_matches_single_device(subproc):
+    """The pjit'd train step on a 2x2 mesh reproduces single-device math."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config, RunConfig
+from repro.models import init
+from repro.train import build_train_step
+from repro.dist.sharding import param_shardings
+
+cfg = get_config('tiny-lm').reduced()
+key = jax.random.PRNGKey(0)
+params = init(cfg, key)
+batch = {'tokens': jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
+         'labels': jax.random.randint(key, (4, 32), 0, cfg.vocab_size)}
+run = RunConfig(optimizer='momentum', momentum=0.9)
+init_opt, step = build_train_step(cfg, run)
+p0, o0, m0 = jax.jit(step)(params, init_opt(params), batch,
+                           jnp.float32(0.1))
+
+mesh = jax.make_mesh((2, 2), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+ps = param_shardings(cfg, mesh, params, fsdp=True)
+with mesh:
+    params_s = jax.device_put(params, ps)
+    batch_s = jax.device_put(batch, NamedSharding(mesh, P('data', None)))
+    p1, o1, m1 = jax.jit(step)(params_s, init_opt(params_s), batch_s,
+                               jnp.float32(0.1))
+assert abs(float(m0['loss']) - float(m1['loss'])) < 1e-4
+for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4,
+                               rtol=2e-4)
+print('SHARDED OK')
+""", n_devices=4)
+    assert "SHARDED OK" in out
+
+
+def test_dc_round_equals_manual_ps_round():
+    """build_dc_round_step (pods=2) == two explicit server pushes where
+    both workers pulled at round start — the bulk-synchronous emulation is
+    exactly one round-robin DC-ASGD round."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import RunConfig, get_config
+    from repro.core import init_server_state, server_push
+    from repro.models import init, loss_fn
+    from repro.train import build_dc_round_step, init_dc_round_state
+
+    cfg = get_config("tiny-lm").reduced()
+    run = RunConfig(optimizer="dc_asgd_a", lambda0=1.0, dc_m=0.9,
+                    snapshot_dtype="float32")
+    key = jax.random.PRNGKey(0)
+    w = init(cfg, key)
+    batches = []
+    for i in range(2):
+        k = jax.random.fold_in(key, i)
+        batches.append({
+            "tokens": jax.random.randint(k, (2, 16), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k, (2, 16), 0, cfg.vocab_size)})
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+    step = build_dc_round_step(cfg, run, n_pods=2)
+    w_stack, ms = init_dc_round_state(w, 2, snapshot_dtype=jnp.float32)
+    w_round, _, ms_round, _ = jax.jit(step)(w, w_stack, ms, stacked,
+                                            jnp.float32(0.1))
+
+    # manual: both workers snapshot w, push sequentially
+    st = init_server_state(w, num_workers=2)
+    for m in range(2):
+        g = jax.grad(lambda p: loss_fn(cfg, p, batches[m])[0])(w)
+        st = server_push(st, g, jnp.int32(m), eta=0.1, lam0=1.0, m=0.9,
+                         algo="dc_asgd_a")
+    for a, b in zip(jax.tree.leaves(w_round), jax.tree.leaves(st.w)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(ms_round), jax.tree.leaves(st.ms)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5,
+                                   rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_dryrun_pipeline_end_to_end(subproc):
+    """The real dry-run driver on the production mesh (smallest arch)."""
+    out = subproc("""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=512'
+import sys
+sys.argv = ['dryrun', '--arch', 'xlstm-125m', '--shape', 'decode_32k',
+            '--artifact-dir', '/tmp/dryrun_test']
+from repro.launch.dryrun import main
+rc = main()
+assert rc == 0
+import json, glob
+rec = json.load(open(glob.glob('/tmp/dryrun_test/*.json')[0]))
+assert rec['flops'] > 0 and rec['collectives']['total_bytes'] >= 0
+assert 'extrapolated' in rec
+print('DRYRUN OK')
+""", n_devices=512, timeout=900)
+    assert "DRYRUN OK" in out
+
+
+def test_sharded_decode_attention_matches_baseline(subproc):
+    """§Perf optimization: shard_map decode attention == plain decode."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models import init, init_cache, prefill, decode_step
+from repro.models.model import ShardingCtx
+
+cfg = get_config('qwen2.5-32b').reduced()
+key = jax.random.PRNGKey(0)
+params = init(cfg, key)
+B, S = 4, 32
+toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+cache = init_cache(cfg, B, S + 8, dtype=jnp.float32)
+lg, cache = jax.jit(lambda p,b,c: prefill(cfg,p,b,c))(params, {'tokens': toks}, cache)
+tok = lg.argmax(-1)[:, None]
+
+# baseline decode
+lg0, _ = jax.jit(lambda p,t,c,pos: decode_step(cfg,p,t,c,pos))(params, tok, cache, jnp.int32(S))
+
+mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+ctx = ShardingCtx(mesh=mesh, batch_axes=('data',), model_axis='model',
+                  sharded_decode_attn=True)
+cache_sharded = jax.device_put(cache, jax.tree.map(
+    lambda x: NamedSharding(mesh, P(None, 'data', 'model', None, None))
+    if x.ndim == 5 else NamedSharding(mesh, P()), cache))
+with mesh:
+    lg1, c1 = jax.jit(lambda p,t,c,pos: decode_step(cfg,p,t,c,pos,ctx))(
+        params, tok, cache_sharded, jnp.int32(S))
+np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1), atol=2e-4, rtol=2e-4)
+# cache updated identically
+lg0b, c0 = jax.jit(lambda p,t,c,pos: decode_step(cfg,p,t,c,pos))(params, tok, cache, jnp.int32(S))
+np.testing.assert_allclose(np.asarray(c0['k']), np.asarray(jax.device_get(c1['k'])), atol=2e-4)
+print('SHARDED DECODE OK')
+""", n_devices=8)
+    assert "SHARDED DECODE OK" in out

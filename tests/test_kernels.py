@@ -1,0 +1,181 @@
+"""Per-kernel correctness: Pallas (interpret=True on CPU) vs the pure-jnp
+oracles in repro.kernels.ref, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dc_update import dc_update_flat
+from repro.kernels.flash_attention import flash_attention_4d
+from repro.kernels.rmsnorm import rmsnorm_2d
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,d", [(8, 64), (16, 128), (24, 256), (8, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel(rows, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(rows * d))
+    x = _rand(k1, (rows, d), dtype)
+    scale = _rand(k2, (d,), jnp.float32)
+    got = rmsnorm_2d(x, scale, interpret=True, block_rows=8)
+    want = ref.rmsnorm(x, scale)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_rmsnorm_ops_padding():
+    """ops wrapper pads odd row counts."""
+    x = _rand(jax.random.PRNGKey(0), (3, 5, 96), jnp.float32)
+    s = _rand(jax.random.PRNGKey(1), (96,), jnp.float32)
+    ops.set_use_pallas(True)
+    try:
+        got = ops.rmsnorm(x, s)
+    finally:
+        ops.set_use_pallas(False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.rmsnorm(x, s)),
+                               atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# dc_update — the paper's fused server update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [256, 1024, 4096])
+@pytest.mark.parametrize("adaptive", [True, False])
+def test_dc_update_kernel(n, adaptive):
+    ks = jax.random.split(jax.random.PRNGKey(n), 4)
+    w = _rand(ks[0], (n,), jnp.float32)
+    bak = w + 0.01 * _rand(ks[1], (n,), jnp.float32)
+    g = _rand(ks[2], (n,), jnp.float32)
+    ms = jnp.abs(_rand(ks[3], (n,), jnp.float32))
+    scalars = jnp.array([0.1, 2.0, 0.95, 1e-7], jnp.float32)
+    got_w, got_ms = dc_update_flat(w, bak, g, ms, scalars,
+                                   adaptive=adaptive, interpret=True,
+                                   block=256)
+    want_w, want_ms = ref.dc_update(w, bak, g, ms, eta=0.1, lam0=2.0,
+                                    m=0.95, eps=1e-7, adaptive=adaptive)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_ms), np.asarray(want_ms),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_dc_update_tree_pallas_matches_ref():
+    tree = {"a": _rand(jax.random.PRNGKey(0), (33, 7), jnp.float32),
+            "b": {"c": _rand(jax.random.PRNGKey(1), (129,), jnp.float32)}}
+    bak = jax.tree.map(lambda x: x * 0.9, tree)
+    g = jax.tree.map(lambda x: x * 0.1 + 0.01, tree)
+    ms = jax.tree.map(jnp.zeros_like, tree)
+    kw = dict(eta=0.5, lam0=0.04, m=0.9, eps=1e-7, adaptive=True)
+    ops.set_use_pallas(True)
+    try:
+        w1, ms1 = ops.dc_update_tree(tree, bak, g, ms, **kw)
+    finally:
+        ops.set_use_pallas(False)
+    w0, ms0 = ops.dc_update_tree(tree, bak, g, ms, **kw)
+    for a, b in zip(jax.tree.leaves(w1), jax.tree.leaves(w0)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    for a, b in zip(jax.tree.leaves(ms1), jax.tree.leaves(ms0)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,skv,hq,hkv,hd", [
+    (64, 64, 4, 2, 32),     # GQA
+    (128, 128, 2, 2, 64),   # MHA
+    (64, 64, 8, 1, 32),     # MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16),
+                                           (False, 0)])
+def test_flash_attention_kernel(sq, skv, hq, hkv, hd, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(sq + hq + window), 3)
+    q = _rand(ks[0], (2, hq, sq, hd), jnp.float32)
+    k = _rand(ks[1], (2, hkv, skv, hd), jnp.float32)
+    v = _rand(ks[2], (2, hkv, skv, hd), jnp.float32)
+    got = flash_attention_4d(q, k, v, causal=causal, window=window,
+                             interpret=True, block_q=32, block_k=32)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (1, 2, 64, 32), dtype)
+    k = _rand(ks[1], (1, 2, 64, 32), dtype)
+    v = _rand(ks[2], (1, 2, 64, 32), dtype)
+    got = flash_attention_4d(q, k, v, causal=True, interpret=True,
+                             block_q=32, block_k=32)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+def test_flash_attention_kv_len_padding():
+    """ops wrapper pads ragged kv and masks the padding."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = _rand(ks[0], (1, 40, 2, 2, 32), jnp.float32)   # [B,S,KV,G,hd]
+    k = _rand(ks[1], (1, 40, 2, 32), jnp.float32)
+    v = _rand(ks[2], (1, 40, 2, 32), jnp.float32)
+    ops.set_use_pallas(True)
+    try:
+        got = ops.flash_attention(q, k, v, causal=True)
+    finally:
+        ops.set_use_pallas(False)
+    want = ops.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_flash_matches_dense_attention_layer():
+    """layers.attention(use_flash=True) == use_flash=False."""
+    from repro.configs import get_config
+    from repro.models import layers as L
+    cfg = get_config("tiny-lm").with_(sliding_window=16)
+    p = L.init_attention(jax.random.PRNGKey(0), cfg)
+    x = _rand(jax.random.PRNGKey(1), (2, 64, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64), (2, 64))
+    ops.set_use_pallas(True)
+    try:
+        y1 = L.attention(p, cfg, x, pos, causal=True, use_flash=True)
+    finally:
+        ops.set_use_pallas(False)
+    y0 = L.attention(p, cfg, x, pos, causal=True, use_flash=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=2e-4,
+                               rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hq,hkv,s,kv_len,window", [
+    (4, 2, 64, 33, 0),
+    (8, 1, 128, 128, 0),
+    (4, 4, 64, 50, 16),
+])
+def test_decode_attention_kernel(hq, hkv, s, kv_len, window):
+    from repro.kernels.decode_attention import decode_attention_3d
+    ks = jax.random.split(jax.random.PRNGKey(hq * s + kv_len), 3)
+    q = _rand(ks[0], (2, hq, 32), jnp.float32)
+    k = _rand(ks[1], (2, hkv, s, 32), jnp.float32)
+    v = _rand(ks[2], (2, hkv, s, 32), jnp.float32)
+    pos = kv_len - 1
+    got = decode_attention_3d(q, k, v, kv_len, pos, window=window,
+                              interpret=True, block_k=32)
+    want = ref.decode_attention(q, k, v, kv_len, pos, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)

@@ -1,0 +1,144 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.dc_ssgd import dc_ssgd_apply
+from repro.kernels import ref
+from repro.utils.hlo import collective_stats
+from repro.utils.tree import global_norm_clip, tree_norm
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+_floats = st.floats(-5, 5, width=32)
+
+
+def _arr(shape_max=64):
+    return hnp.arrays(np.float32, st.integers(1, shape_max),
+                      elements=_floats)
+
+
+# ---------------------------------------------------------------------------
+# DC update invariants
+# ---------------------------------------------------------------------------
+
+@given(_arr(), st.floats(0, 4), st.floats(0.001, 1.0))
+def test_dc_zero_drift_is_sgd(g, lam, eta):
+    """w == w_bak: DC-ASGD step == SGD step for every lambda."""
+    w = np.linspace(-1, 1, g.shape[0]).astype(np.float32)
+    ms = np.zeros_like(w)
+    w1, _ = ref.dc_update(jnp.asarray(w), jnp.asarray(w), jnp.asarray(g),
+                          jnp.asarray(ms), eta=float(eta), lam0=float(lam),
+                          adaptive=False)
+    np.testing.assert_allclose(np.asarray(w1), w - np.float32(eta) * g, rtol=2e-4,
+                               atol=2e-4)
+
+
+@given(_arr())
+def test_dc_lambda0_ignores_backup(g):
+    """lambda=0: the backup snapshot must not influence the update (ASGD)."""
+    n = g.shape[0]
+    w = np.linspace(-2, 2, n).astype(np.float32)
+    bak1 = w * 0.0
+    bak2 = w * 17.0 + 3
+    ms = np.zeros_like(w)
+    w1, _ = ref.dc_update(jnp.asarray(w), jnp.asarray(bak1), jnp.asarray(g),
+                          jnp.asarray(ms), eta=0.1, lam0=0.0, adaptive=False)
+    w2, _ = ref.dc_update(jnp.asarray(w), jnp.asarray(bak2), jnp.asarray(g),
+                          jnp.asarray(ms), eta=0.1, lam0=0.0, adaptive=False)
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+
+
+@given(_arr(), st.floats(0.0, 0.999))
+def test_meansquare_ema_bounds(g, m):
+    """Eqn. 14: ms' lies between ms and g**2 elementwise."""
+    n = g.shape[0]
+    ms = np.abs(np.linspace(0.1, 2, n)).astype(np.float32)
+    _, ms1 = ref.dc_update(jnp.zeros(n), jnp.zeros(n), jnp.asarray(g),
+                           jnp.asarray(ms), eta=0.1, lam0=1.0, m=float(m),
+                           adaptive=True)
+    lo = np.minimum(ms, g * g) - 1e-5
+    hi = np.maximum(ms, g * g) + 1e-5
+    got = np.asarray(ms1)
+    assert (got >= lo).all() and (got <= hi).all()
+
+
+@given(_arr(16), st.integers(1, 4))
+def test_dc_ssgd_lambda0_linear_scaling(g, m_chunks):
+    """Appendix H with lam=0 == one SGD step with the mean gradient,
+    regardless of how the microbatches are ordered."""
+    gs = np.stack([g * (i + 1) for i in range(m_chunks)])
+    w = {"a": jnp.ones(g.shape[0])}
+    out = dc_ssgd_apply(w, {"a": jnp.asarray(gs)}, eta=0.3, lam=0.0)
+    want = 1.0 - 0.3 * gs.mean(0)
+    np.testing.assert_allclose(np.asarray(out["a"]), want, rtol=2e-4,
+                               atol=2e-4)
+    # permutation invariance at lam=0
+    out_p = dc_ssgd_apply(w, {"a": jnp.asarray(gs[::-1].copy())}, eta=0.3,
+                          lam=0.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(out_p["a"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernels / numerics invariants
+# ---------------------------------------------------------------------------
+
+@given(hnp.arrays(np.float32, st.tuples(st.integers(1, 4),
+                                        st.sampled_from([8, 16, 32])),
+                  elements=st.floats(-3, 3, width=32).filter(
+                      lambda v: abs(v) > 1e-3)),
+       st.floats(0.5, 4.0))
+def test_rmsnorm_scale_invariance(x, c):
+    """rmsnorm(c*x) == rmsnorm(x) for c > 0."""
+    scale = jnp.ones(x.shape[-1])
+    a = ref.rmsnorm(jnp.asarray(x), scale, eps=1e-12)
+    b = ref.rmsnorm(jnp.asarray(x) * np.float32(c), scale, eps=1e-12)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3,
+                               rtol=2e-3)
+
+
+@given(st.integers(4, 32), st.integers(1, 3))
+def test_flash_attention_probability_simplex(skv, b):
+    """With v = ones, attention output must be exactly ones (softmax sums
+    to 1 over the valid positions)."""
+    q = jnp.zeros((b, 2, skv, 8))
+    k = jax.random.normal(jax.random.PRNGKey(skv), (b, 2, skv, 8))
+    v = jnp.ones((b, 2, skv, 8))
+    out = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
+
+
+@given(_arr(128), st.floats(0.1, 10))
+def test_global_norm_clip(v, max_norm):
+    tree = {"a": jnp.asarray(v)}
+    clipped = global_norm_clip(tree, float(max_norm))
+    assert float(tree_norm(clipped)) <= max_norm * (1 + 1e-4)
+    if float(tree_norm(tree)) <= max_norm:
+        np.testing.assert_allclose(np.asarray(clipped["a"]), v, rtol=1e-5,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 512), st.integers(1, 64), st.integers(1, 64))
+def test_collective_parser_ring_accounting(n, a, b):
+    hlo = (f"  %ar = f32[{a},{b}] all-reduce(f32[{a},{b}] %x), "
+           f"replica_groups=[1,{n}]<=[{n}]\n"
+           f"  %ag = bf16[{a},{b}] all-gather(bf16[{a},{b}] %y), "
+           f"replica_groups=[1,{n}]<=[{n}]\n")
+    stats = collective_stats(hlo, default_group=n)
+    size_f32 = a * b * 4
+    size_bf16 = a * b * 2
+    want = size_f32 * 2 * (n - 1) / n + size_bf16 * (n - 1) / n
+    assert abs(stats.total_bytes - want) < 1e-6 * max(want, 1)
+    assert stats.counts == {"all-reduce": 1, "all-gather": 1}
